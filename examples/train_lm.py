@@ -1,0 +1,52 @@
+"""End-to-end driver (paper §5.2 at CPU scale): train the paper's
+pythia-1.4b architecture — reduced width — for a few hundred steps with
+the linear-attention backend, through the full production stack
+(data pipeline -> jitted train step -> fault-tolerant Trainer with
+checkpointing).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as mdl
+from repro.train.loop import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config("pythia-1.4b", smoke=True)   # paper's e2e arch
+    print(f"arch={cfg.name} backend={cfg.attention_backend} "
+          f"params={sum(x.size for x in jax.tree.leaves(mdl.init_params(cfg, jax.random.PRNGKey(0))))/1e6:.1f}M")
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        tc = TrainConfig(learning_rate=1e-3, min_learning_rate=5e-5,
+                         warmup_steps=args.steps // 10,
+                         total_steps=args.steps,
+                         checkpoint_every=args.steps // 3,
+                         checkpoint_dir=ckpt_dir)
+        params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+        data = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
+        trainer = Trainer(cfg, tc, params, data)
+        hist = trainer.run(args.steps)
+
+    first = sum(h["loss"] for h in hist[:10]) / 10
+    last = sum(h["loss"] for h in hist[-10:]) / 10
+    print(f"loss: {first:.4f} -> {last:.4f} over {len(hist)} steps "
+          f"({trainer.monitor.flagged} straggler steps)")
+    assert last < first, "training must converge"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+TPU v5e constants (target hardware; this container is CPU-only):
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+compiled.cost_analysis() is PER-DEVICE (the post-SPMD module), so:
+    T_compute    = flops_per_device / peak
+    T_memory     = bytes_per_device / hbm_bw
+    T_collective = collective_bytes_per_device / link_bw
+which equals the global formulation HLO_FLOPs / (chips * peak) etc.
+
+MODEL_FLOPS = 6 * N_params * D_tokens (dense; active params for MoE) is
+the "useful work" yardstick; usefulness = MODEL_FLOPS / (global HLO
+FLOPs) exposes remat/dispatch overhead.  Caveat recorded per cell: the
+collective term uses raw payload bytes (ring-algorithm factors ~2x for
+all-reduce are noted, not applied).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    model_flops: float            # 6*N*D global
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    dominant: str = ""
+    usefulness: float = 0.0
+    memory_stats: dict | None = None
+    collective_detail: dict | None = None
+    note: str = ""
+
+    def finalize(self) -> "Roofline":
+        self.t_compute = self.flops_per_device / PEAK_FLOPS
+        self.t_memory = self.bytes_per_device / HBM_BW
+        self.t_collective = self.collective_bytes / LINK_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.dominant = max(terms, key=terms.get)
+        global_flops = self.flops_per_device * self.chips
+        self.usefulness = (self.model_flops / global_flops
+                           if global_flops else 0.0)
+        return self
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the dominant term is to pure compute-bound."""
+        return self.t_compute / self.bound_time if self.bound_time else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["bound_time_s"] = self.bound_time
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N_active*D for a train step (3x for fwd+bwd is folded into 6N);
+    2*N_active*D for inference steps (forward only).
+
+    enc-dec: encoder params see B*enc_seq tokens, decoder (+cross +
+    unembed) see the decoder tokens; decode reruns the decoder only.
+    """
+    n_params = cfg.active_param_count()
+    mult = {"train": 6.0, "prefill": 2.0, "decode": 2.0}[shape.kind]
+    b, n = shape.global_batch, shape.seq_len
+    dec_tokens = b if shape.kind == "decode" else b * n
+
+    if cfg.family == "encdec":
+        d, hd = cfg.d_model, cfg.resolved_head_dim
+        attn = d * hd * (cfg.num_heads + 2 * cfg.num_kv_heads) \
+            + cfg.num_heads * hd * d
+        ffm = (3 if cfg.mlp_act == "swiglu" else 2) * d * cfg.d_ff
+        enc_p = cfg.encoder_layers * (attn + ffm)
+        dec_p = n_params - enc_p
+        if shape.kind == "decode":
+            return mult * dec_p * dec_tokens  # encoder state is cached
+        return mult * (enc_p * b * cfg.encoder_seq + dec_p * dec_tokens)
+    return mult * n_params * dec_tokens
+
+
+def save_artifact(r: Roofline, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    fn = os.path.join(out_dir, f"{r.arch}__{r.shape}__{r.mesh}.json")
+    with open(fn, "w") as f:
+        json.dump(r.to_dict(), f, indent=1)
+    return fn
+
+
+def load_artifacts(out_dir: str) -> list[dict]:
+    rows = []
+    if not os.path.isdir(out_dir):
+        return rows
+    for fn in sorted(os.listdir(out_dir)):
+        if fn.endswith(".json"):
+            with open(os.path.join(out_dir, fn)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':9s} "
+           f"{'T_comp(s)':>10s} {'T_mem(s)':>10s} {'T_coll(s)':>10s} "
+           f"{'bound':>10s} {'useful':>7s} {'frac':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:9s} "
+            f"{r['t_compute']:10.3e} {r['t_memory']:10.3e} "
+            f"{r['t_collective']:10.3e} {r['dominant']:>10s} "
+            f"{r['usefulness']:7.3f} {r.get('roofline_fraction', 0):6.3f}")
+    return "\n".join(lines)

@@ -1,0 +1,70 @@
+"""Architecture registry: --arch <id> resolution + input specs per shape.
+
+`input_specs(cfg, shape)` returns jax.ShapeDtypeStruct stand-ins for every
+model input of the given (architecture x shape) cell — weak-type-correct,
+shardable, no device allocation — plus the step kind to lower
+(train_step / prefill_step / serve_step).
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+_MODULES = {
+    "whisper-large-v3": "whisper_large_v3",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "qwen2.5-3b": "qwen2p5_3b",
+    "stablelm-1.6b": "stablelm_1p6b",
+    "chatglm3-6b": "chatglm3_6b",
+    "granite-20b": "granite_20b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "zamba2-7b": "zamba2_7b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "pythia-1.4b": "pythia_1p4b",
+}
+
+ARCHS = [a for a in _MODULES if a != "pythia-1.4b"]  # the 10 assigned
+
+
+def get_config(arch: str, smoke: bool = False, **kw) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return (mod.smoke if smoke else mod.full)(**kw)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Returns (specs: dict of ShapeDtypeStruct pytrees, step_kind: str)."""
+    b, n = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+
+    def batch_specs(seq_len):
+        specs = {"tokens": sds((b, seq_len), I32)}
+        if cfg.family == "encdec":
+            specs["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), F32)
+        if cfg.rope_kind == "mrope":
+            specs["positions"] = sds((3, b, seq_len), I32)
+        return specs
+
+    if shape.kind == "train":
+        return batch_specs(n), "train"
+    if shape.kind == "prefill":
+        return batch_specs(n), "prefill"
+    # decode: one new token against a cache holding seq_len of context
+    from repro.models import model as mdl
+    cache = jax.eval_shape(
+        lambda: mdl.init_cache(cfg, b, n, jnp.bfloat16))
+    return {"tokens": sds((b,), I32), "cache": cache}, "decode"

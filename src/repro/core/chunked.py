@@ -1,0 +1,291 @@
+"""Chunked-scan formulation of the paper's linear attention — XLA path.
+
+This is the TPU-native adaptation of the paper's prefix-sum factorization
+(Eqs. 5-9, 19-21).  The sequence is processed in MXU-friendly chunks of C
+tokens; the paper's "repeated computation patterns" x^(1), x^(2), y^(1),
+y^(2) collapse into a single carried state by augmenting V with a ones
+column:
+
+    V' = [V, 1]                               (C, D+1)
+    S  = sum_{n < chunk} k_n (x) V'_n          (D, D+1)   ["Linear term" state]
+    P  = sum_{n < chunk} V'_n                  (D+1,)     ["Constant term" state]
+    F' = a (1 P^T + cumsum V') + b (Q S + tril(Q K^T) V')
+    O  = F'[:, :D] / F'[:, D]                 (numerator / g)
+
+The backward pass implements the paper's analytic gradient (Eqs. 19-21)
+from residuals {Q, K, V, O, g} only — O(N D) memory — with one forward
+chunk scan (grad Q; the alpha^Q/beta^Q recurrences) and one reverse chunk
+scan (grad K and grad V fused; the alpha^K/beta^K/alpha^V/beta^V
+recurrences), each carrying a single augmented (D+1)-state.
+
+All matmuls accumulate in f32 (`preferred_element_type`); inputs may be
+bf16.  Grouped-query attention is supported natively: q is (B, H, N, D)
+and k/v are (B, Hkv, N, D) with Hkv | H — the state is per KV head and
+shared across the query group, so no KV repetition is materialized.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import safe_div
+
+F32 = jnp.float32
+
+
+class LAState(NamedTuple):
+    """Recurrent linear-attention state (decode cache; constant in N).
+
+    s: (B, Hkv, Dk, Dv+1) — sum of k (x) [v, 1]
+    p: (B, Hkv, Dv+1)     — sum of [v, 1] (last component = token count)
+    """
+
+    s: jnp.ndarray
+    p: jnp.ndarray
+
+
+def init_state(batch: int, num_kv_heads: int, dk: int, dv: int | None = None,
+               dtype=jnp.float32) -> LAState:
+    dv = dk if dv is None else dv
+    return LAState(
+        s=jnp.zeros((batch, num_kv_heads, dk, dv + 1), dtype),
+        p=jnp.zeros((batch, num_kv_heads, dv + 1), dtype),
+    )
+
+
+def _group(q: jnp.ndarray, num_kv_heads: int) -> jnp.ndarray:
+    """(B, H, N, D) -> (B, Hkv, G, N, D)."""
+    b, h, n, d = q.shape
+    assert h % num_kv_heads == 0, (h, num_kv_heads)
+    return q.reshape(b, num_kv_heads, h // num_kv_heads, n, d)
+
+
+def _pad_to(x: jnp.ndarray, n: int, axis: int) -> jnp.ndarray:
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _chunks(x: jnp.ndarray, c: int, axis: int) -> jnp.ndarray:
+    """Split axis `axis` of length T*c into leading (T, ..., c, ...)."""
+    t = x.shape[axis] // c
+    new_shape = x.shape[:axis] + (t, c) + x.shape[axis + 1:]
+    x = x.reshape(new_shape)
+    return jnp.moveaxis(x, axis, 0)
+
+
+# ---------------------------------------------------------------------------
+# Forward (causal)
+# ---------------------------------------------------------------------------
+
+def la_fwd_chunked(q, k, v, a: float, b: float, chunk: int = 128,
+                   state: LAState | None = None):
+    """Causal normalized linear attention, chunked scan.
+
+    Returns (o, g, final_state):
+      o: (B, H, N, D) in q.dtype, g: (B, H, N) f32 normalizer,
+      final_state: LAState (f32) — feeds decode.
+    """
+    bsz, h, n, dk = q.shape
+    dv = v.shape[-1]
+    hkv = k.shape[1]
+    out_dtype = q.dtype
+    c = min(chunk, n)
+    n_pad = -(-n // c) * c
+
+    qg = _group(_pad_to(q, n_pad, 2), hkv)
+    kp = _pad_to(k, n_pad, 2)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    # ones column appended BEFORE padding so padded rows contribute nothing
+    # to the carried state (count column included).
+    vaug = _pad_to(jnp.concatenate([v, ones], axis=-1), n_pad, 2)
+
+    q_c = _chunks(qg, c, 3)      # (T,B,Hkv,G,C,D)
+    k_c = _chunks(kp, c, 2)      # (T,B,Hkv,C,D)
+    va_c = _chunks(vaug, c, 2)   # (T,B,Hkv,C,D+1)
+
+    tril = jnp.tril(jnp.ones((c, c), F32))
+    if state is None:
+        state = init_state(bsz, hkv, dk, dv)
+    a32, b32 = jnp.asarray(a, F32), jnp.asarray(b, F32)
+
+    def step(carry, inp):
+        s, p = carry
+        qc, kc, vac = inp
+        att = a32 + b32 * jnp.einsum("bhgid,bhjd->bhgij", qc, kc,
+                                     preferred_element_type=F32)
+        att = att * tril
+        f_intra = jnp.einsum("bhgij,bhje->bhgie", att, vac,
+                             preferred_element_type=F32)
+        f_inter = (a32 * p[:, :, None, None, :]
+                   + b32 * jnp.einsum("bhgid,bhde->bhgie", qc, s,
+                                      preferred_element_type=F32))
+        f = f_intra + f_inter
+        s = s + jnp.einsum("bhjd,bhje->bhde", kc, vac,
+                           preferred_element_type=F32)
+        p = p + jnp.sum(vac.astype(F32), axis=-2)
+        return (s, p), f
+
+    (s_f, p_f), f_all = jax.lax.scan(step, (state.s, state.p),
+                                     (q_c, k_c, va_c))
+    # (T,B,Hkv,G,C,Dv+1) -> (B,H,Np,Dv+1)
+    f_all = jnp.moveaxis(f_all, 0, 3).reshape(bsz, h, n_pad, dv + 1)
+    f_all = f_all[:, :, :n]
+    g = f_all[..., dv]
+    o = safe_div(f_all[..., :dv], g[..., None]).astype(out_dtype)
+    return o, g, LAState(s_f, p_f)
+
+
+# ---------------------------------------------------------------------------
+# Backward (causal) — paper Eqs. 19-21, chunked
+# ---------------------------------------------------------------------------
+
+def la_bwd_chunked(q, k, v, o, g, omega, a: float, b: float,
+                   chunk: int = 128):
+    """Analytic gradient from residuals {q,k,v,o,g} and upstream grad omega.
+
+    Returns (dq, dk, dv) in the respective input dtypes.
+    """
+    bsz, h, n, dk = q.shape
+    dv = v.shape[-1]
+    hkv = k.shape[1]
+    c = min(chunk, n)
+    n_pad = -(-n // c) * c
+    a32, b32 = jnp.asarray(a, F32), jnp.asarray(b, F32)
+
+    # Ω̂ = Ω / g  and  h_i = o_i · Ω̂_i   (paper Eq. 20)
+    om_hat = safe_div(omega.astype(F32), g[..., None])
+    h_vec = jnp.sum(o.astype(F32) * om_hat, axis=-1)  # (B,H,N)
+
+    om_hat = _group(_pad_to(om_hat, n_pad, 2), hkv)
+    h_g = _group(_pad_to(h_vec[..., None], n_pad, 2), hkv)
+    qg = _group(_pad_to(q, n_pad, 2), hkv)
+    kp = _pad_to(k, n_pad, 2)
+    vp = _pad_to(v, n_pad, 2)
+    ones = jnp.ones(vp.shape[:-1] + (1,), F32)
+    vaug = jnp.concatenate([vp.astype(F32), ones], -1)       # [v, 1]
+    vneg = jnp.concatenate([vp.astype(F32), -ones], -1)      # [v, -1]
+    qaug = jnp.concatenate([qg.astype(F32),
+                            jnp.ones(qg.shape[:-1] + (1,), F32)], -1)
+
+    q_c = _chunks(qg, c, 3)
+    qa_c = _chunks(qaug, c, 3)
+    k_c = _chunks(kp, c, 2)
+    va_c = _chunks(vaug, c, 2)
+    vn_c = _chunks(vneg, c, 2)
+    omh_c = _chunks(om_hat, c, 3)
+    h_c = _chunks(h_g, c, 3)
+
+    tril = jnp.tril(jnp.ones((c, c), F32))
+
+    # ---- grad Q: forward scan, carry A = sum k (x) [v,1]  (alpha^Q/beta^Q)
+    def step_q(carry, inp):
+        a_st = carry
+        qc, kc, vac, omc, hc = inp
+        gmat = jnp.concatenate([omc, -hc], axis=-1)  # [Ω̂, -h]
+        sc = jnp.einsum("bhgie,bhje->bhgij", gmat, vac,
+                        preferred_element_type=F32) * tril
+        dq_intra = jnp.einsum("bhgij,bhjd->bhgid", sc, kc,
+                              preferred_element_type=F32)
+        dq_inter = jnp.einsum("bhgie,bhde->bhgid", gmat, a_st,
+                              preferred_element_type=F32)
+        a_st = a_st + jnp.einsum("bhjd,bhje->bhde", kc, vac,
+                                 preferred_element_type=F32)
+        return a_st, b32 * (dq_intra + dq_inter)
+
+    a0 = jnp.zeros((bsz, hkv, dk, dv + 1), F32)
+    _, dq_all = jax.lax.scan(step_q, a0, (q_c, k_c, va_c, omh_c, h_c))
+
+    # ---- grad K / grad V: reverse scan, carry U = suffix sum q' (x) [Ω̂, h]
+    def step_kv(carry, inp):
+        u = carry  # (B,Hkv,D+1,D+1)
+        qc, qac, kc, vnc, omc, hc = inp
+        g2 = jnp.concatenate([omc, hc], axis=-1)  # [Ω̂, +h]
+        # dK intra: sum_{i>=p} q_i (Ω̂_i·v_p - h_i)
+        sc = jnp.einsum("bhgie,bhpe->bhgip", g2, vnc,
+                        preferred_element_type=F32) * tril
+        dk_intra = jnp.einsum("bhgip,bhgid->bhpd", sc, qc,
+                              preferred_element_type=F32)
+        dk_inter = jnp.einsum("bhpe,bhde->bhpd", vnc, u[..., :dk, :],
+                              preferred_element_type=F32)
+        # dV intra: sum_{i>=p} (a + b q_i·k_p) Ω̂_i
+        att = a32 + b32 * jnp.einsum("bhgid,bhpd->bhgip", qc, kc,
+                                     preferred_element_type=F32)
+        att = att * tril
+        dv_intra = jnp.einsum("bhgip,bhgij->bhpj", att, omc,
+                              preferred_element_type=F32)
+        dv_inter = (b32 * jnp.einsum("bhpd,bhdj->bhpj", kc,
+                                     u[..., :dk, :dv],
+                                     preferred_element_type=F32)
+                    + a32 * u[..., dk, :dv][:, :, None, :])
+        u = u + jnp.einsum("bhgic,bhgie->bhce", qac, g2,
+                           preferred_element_type=F32)
+        return u, (b32 * (dk_intra + dk_inter), dv_intra + dv_inter)
+
+    u0 = jnp.zeros((bsz, hkv, dk + 1, dv + 1), F32)
+    _, (dk_all, dv_all) = jax.lax.scan(step_kv, u0,
+                                       (q_c, qa_c, k_c, vn_c, omh_c, h_c),
+                                       reverse=True)
+
+    dq = jnp.moveaxis(dq_all, 0, 3).reshape(bsz, h, n_pad, dk)[:, :, :n]
+    dk_o = jnp.moveaxis(dk_all, 0, 2).reshape(bsz, hkv, n_pad, dk)[:, :, :n]
+    dv_o = jnp.moveaxis(dv_all, 0, 2).reshape(bsz, hkv, n_pad, dv)[:, :, :n]
+    return dq.astype(q.dtype), dk_o.astype(k.dtype), dv_o.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Non-causal (paper Eq. 4, right) — cross-attention path
+# ---------------------------------------------------------------------------
+
+def la_noncausal(q, k, v, a: float, b: float):
+    """Bidirectional normalized LA: O(N D^2) einsum chain, autodiff-safe.
+
+    q: (B, H, Nq, D); k/v: (B, Hkv, Nk, D).  Intermediates are O(D^2 + ND),
+    so autodiff already achieves the paper's memory bound here; no custom
+    backward is needed.
+    """
+    bsz, h, nq, dk = q.shape
+    dv = v.shape[-1]
+    hkv = k.shape[1]
+    out_dtype = q.dtype
+    qg = _group(q, hkv)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    vaug = jnp.concatenate([v, ones], -1)
+    s = jnp.einsum("bhjd,bhje->bhde", k, vaug, preferred_element_type=F32)
+    p = jnp.sum(vaug.astype(F32), axis=-2)  # (B,Hkv,D+1)
+    f = (a * p[:, :, None, None, :]
+         + b * jnp.einsum("bhgid,bhde->bhgie", qg, s,
+                          preferred_element_type=F32))
+    o = safe_div(f[..., :dv], f[..., dv:])
+    return o.reshape(bsz, h, nq, dv).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving): O(D^2) per token, state independent of context length
+# ---------------------------------------------------------------------------
+
+def la_decode_step(state: LAState, q, k, v, a: float, b: float):
+    """One-token decode.  q: (B, H, D); k, v: (B, Hkv, D).
+
+    Returns (new_state, o) with o: (B, H, D).  This is the paper's
+    deployment story: constant-time, constant-memory generation.
+    """
+    bsz, h, dk = q.shape
+    dv = v.shape[-1]
+    hkv = k.shape[1]
+    kf, vf = k.astype(F32), v.astype(F32)
+    vaug = jnp.concatenate([vf, jnp.ones((bsz, hkv, 1), F32)], -1)
+    s = state.s + kf[..., :, None] * vaug[..., None, :]
+    p = state.p + vaug
+    qg = q.reshape(bsz, hkv, h // hkv, dk)
+    f = (a * p[:, :, None, :]
+         + b * jnp.einsum("bhgd,bhde->bhge", qg, s,
+                          preferred_element_type=F32))
+    o = safe_div(f[..., :dv], f[..., dv:])
+    return LAState(s, p), o.reshape(bsz, h, dv).astype(q.dtype)

@@ -1,0 +1,61 @@
+"""Module-level API for the paper's linear attention.
+
+This is the composable entry point models use: it applies the paper's
+q/k l2 normalization (Eq. 22), dispatches causal / non-causal paths, and
+exposes prefill/decode for serving.  The heavy lifting lives in
+`core.chunked` (XLA path) and `kernels.linear_attention` (Pallas path),
+tied together by the custom-vjp wrapper in `kernels.ops`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.chunked import LAState, init_state
+from repro.core.numerics import l2_normalize
+from repro.kernels import ops as _ops
+
+
+@dataclasses.dataclass(frozen=True)
+class LAConfig:
+    """Linear-attention hyperparameters (paper §3-4)."""
+
+    a: float = 1.0           # constant kernel coefficient; f(x) = a + b x
+    b: float = 1.0
+    normalize_qk: bool = True  # paper Eq. 22
+    chunk: int = 128           # TPU chunk size (MXU-aligned)
+    backend: str = "auto"      # auto | xla | pallas | pallas_interpret | ref
+
+
+def la_attention(q, k, v, cfg: LAConfig = LAConfig(), *, causal: bool = True):
+    """q: (B, H, N, D); k, v: (B, Hkv, N, D).  Returns (B, H, N, D)."""
+    if cfg.normalize_qk:
+        q, k = l2_normalize(q), l2_normalize(k)
+    if causal:
+        return _ops.la_causal(q, k, v, cfg.a, cfg.b, cfg.chunk, cfg.backend)
+    return _ops.la_noncausal(q, k, v, cfg.a, cfg.b)
+
+
+def la_attention_prefill(q, k, v, cfg: LAConfig = LAConfig(),
+                         state: LAState | None = None):
+    """Serving prefill: returns (o, LAState) for subsequent decode."""
+    if cfg.normalize_qk:
+        q, k = l2_normalize(q), l2_normalize(k)
+    return _ops.la_prefill(q, k, v, cfg.a, cfg.b, cfg.chunk, state=state)
+
+
+def la_attention_decode(state: LAState, q, k, v, cfg: LAConfig = LAConfig()):
+    """Serving decode: one token.  q: (B, H, D); k, v: (B, Hkv, D).
+
+    O(D^2) per token — context length only enters through the state.
+    """
+    if cfg.normalize_qk:
+        q, k = l2_normalize(q), l2_normalize(k)
+    return _ops.la_decode_step(state, q, k, v, cfg.a, cfg.b)
+
+
+__all__ = [
+    "LAConfig", "LAState", "init_state",
+    "la_attention", "la_attention_prefill", "la_attention_decode",
+]

@@ -1,0 +1,25 @@
+"""Numerical helpers shared by the linear-attention core (paper §3.3)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l2_normalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-6) -> jnp.ndarray:
+    """Row-wise l2 normalization, paper Eq. 22: q_i <- q_i / ||q_i||.
+
+    Computed in f32 and cast back so bf16 inputs do not lose the scale.
+    """
+    xf = x.astype(jnp.float32)
+    inv = jnp.reciprocal(jnp.sqrt(jnp.sum(xf * xf, axis=axis, keepdims=True) + eps))
+    return (xf * inv).astype(x.dtype)
+
+
+def safe_div(num: jnp.ndarray, den: jnp.ndarray, eps: float = 1e-30) -> jnp.ndarray:
+    """num / den with exact zeros in `den` (padding rows) mapped to 0.
+
+    With the paper's normalization (Eq. 22) and a,b > 0 the denominator
+    g_i = sum_{n<=i} (a + b q_i.k_n) >= i(a - b) is non-negative; zeros only
+    appear for padded rows which callers slice away.
+    """
+    den_safe = jnp.where(jnp.abs(den) < eps, 1.0, den)
+    return jnp.where(jnp.abs(den) < eps, 0.0, num / den_safe)

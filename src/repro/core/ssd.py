@@ -1,0 +1,266 @@
+"""Chunked state-space duality (SSD / Mamba-2) — scalar-decay linear attention.
+
+The paper (Appendix B, Table 3) identifies Mamba-2's recurrence
+    S_t = gamma_t S_{t-1} + k_t v_t^T,   o_t = q_t S_t
+as gated linear attention.  This module generalizes the chunked LA scan
+of `core.chunked` with a per-token per-head scalar decay.
+
+GROUPED q/k (beyond-paper perf): Mamba-2 shares B (keys) and C (queries)
+across all heads of a group — materializing them per head costs an
+H-fold blowup in both flops (the Q K^T product) and bytes.  Every
+function here takes q, k of shape (B, G, N, Dk) with G | H; the Q K^T
+product is computed ONCE per group and only the per-head decay masks and
+value contractions run at H (mirroring the paper's GQA handling in
+core/chunked.py).  G == H recovers the ungrouped form.
+
+All decay algebra is done in log space for stability (within-chunk
+exponents are differences of monotone cumsums, always <= 0).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class SSDState(NamedTuple):
+    s: jnp.ndarray  # (B, H, Dk, Dv)
+
+
+def init_ssd_state(batch: int, heads: int, dk: int, dv: int,
+                   dtype=jnp.float32) -> SSDState:
+    return SSDState(s=jnp.zeros((batch, heads, dk, dv), dtype))
+
+
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, pad)
+    return jnp.pad(x, w)
+
+
+def _group(x, g: int):
+    """(B, H, ...) -> (B, G, H/G, ...)."""
+    b, h = x.shape[:2]
+    return x.reshape(b, g, h // g, *x.shape[2:])
+
+
+def _chop(x, t, c):
+    """(B, ..., N, ...) with N at axis -2 for 4/5-D tensors."""
+    axis = x.ndim - 2
+    new = x.shape[:axis] + (t, c) + x.shape[axis + 1:]
+    return jnp.moveaxis(x.reshape(new), axis, 0)
+
+
+def _chop_l(x, t, c):
+    """last-axis chop for (B, G, Hg, N) decay tensors."""
+    new = x.shape[:-1] + (t, c)
+    return jnp.moveaxis(x.reshape(new), -2, 0)
+
+
+def ssd_fwd_chunked(q, k, v, log_decay, chunk: int = 128,
+                    state: SSDState | None = None):
+    """q, k: (B, G, N, Dk) shared per group (G | H); v: (B, H, N, Dv);
+    log_decay: (B, H, N) <= 0.  Returns (o, final_state (B, H, Dk, Dv))."""
+    bsz, g, n, dk = q.shape
+    h = v.shape[1]
+    hg = h // g
+    dv = v.shape[-1]
+    out_dtype = v.dtype
+    c = min(chunk, n)
+    n_pad = -(-n // c) * c
+    t = n_pad // c
+
+    # inputs stay in their dtype (bf16 in production) — casting whole
+    # arrays to f32 makes XLA hoist the convert through pads/slices and
+    # run the surrounding layers in f32 (observed 2x traffic); chunk
+    # accumulation still happens in f32 via preferred_element_type and
+    # the f32 decay weights.
+    qp = _pad_to(q, n_pad, 2)
+    kp = _pad_to(k, n_pad, 2)
+    vp = _group(_pad_to(v, n_pad, 2), g)
+    ldp = _group(_pad_to(log_decay.astype(F32), n_pad, 2), g)
+
+    q_c, k_c = _chop(qp, t, c), _chop(kp, t, c)     # (T, B, G, C, Dk)
+    v_c = _chop(vp, t, c)                           # (T, B, G, Hg, C, Dv)
+    ld_c = _chop_l(ldp, t, c)                       # (T, B, G, Hg, C)
+
+    if state is None:
+        state = init_ssd_state(bsz, h, dk, dv)
+    s0 = _group(state.s.astype(F32), g)             # f32 carried state
+    mask = jnp.tril(jnp.ones((c, c), bool))
+
+    def step(s, inp):
+        qc, kc, vc, ld = inp
+        cl = jnp.cumsum(ld, axis=-1)                # (B, G, Hg, C)
+        total = cl[..., -1:]
+        # Q K^T once per group; decay mask per head
+        att = jnp.einsum("bgid,bgjd->bgij", qc, kc,
+                         preferred_element_type=F32)
+        diff = cl[..., :, None] - cl[..., None, :]
+        w = att[:, :, None] * jnp.where(mask, jnp.exp(diff), 0.0)
+        o_intra = jnp.einsum("bghij,bghje->bghie", w, vc,
+                             preferred_element_type=F32)
+        o_inter = jnp.exp(cl)[..., None] * jnp.einsum(
+            "bgid,bghde->bghie", qc, s, preferred_element_type=F32)
+        # state: weight v (per head) instead of broadcasting k
+        vw = jnp.exp(total - cl)[..., None] * vc
+        s = jnp.exp(total)[..., None] * s + jnp.einsum(
+            "bgjd,bghje->bghde", kc, vw, preferred_element_type=F32)
+        return s, o_intra + o_inter
+
+    s_f, o_all = jax.lax.scan(step, s0, (q_c, k_c, v_c, ld_c))
+    # (T, B, G, Hg, C, Dv) -> (B, G, Hg, T, C, Dv) -> (B, H, N, Dv)
+    o = jnp.moveaxis(o_all, 0, 3).reshape(bsz, h, n_pad, dv)[:, :, :n]
+    return o.astype(out_dtype), SSDState(s_f.reshape(bsz, h, dk, dv))
+
+
+def ssd_decode_step(state: SSDState, q, k, v, log_decay):
+    """One-token decode.  q, k: (B, G, Dk); v: (B, H, Dv); ld: (B, H)."""
+    bsz, g, dk = q.shape
+    h = v.shape[1]
+    gamma = jnp.exp(log_decay.astype(F32))[..., None, None]
+    kf = _group(jnp.repeat(k, h // g, axis=1) if g != h else k, 1)[:, 0]
+    s = gamma * state.s + kf.astype(F32)[..., :, None] \
+        * v.astype(F32)[..., None, :]
+    qf = jnp.repeat(q, h // g, axis=1) if g != h else q
+    o = jnp.einsum("bhd,bhde->bhe", qf.astype(F32), s)
+    return SSDState(s), o.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Analytic backward — the paper's Eqs. 19-21 discipline EXTENDED to the
+# decay-gated mixer (beyond-paper: the paper derives it only for the
+# undecayed normalized kernel).  With M_in = exp(cl_i - cl_n) and
+# S_i = sum_{n<=i} M_in k_n v_n^T (the forward state):
+#
+#   dq_i  = sum_{h in group} S^h_i @ Omega_{h,i}   (forward chunk scan)
+#   dk_n  = sum_{h} U^h_n @ v_{h,n},  dv_n = U_n^T @ k_n   (reverse scan,
+#            U^h_n = sum_{i>=n} M^h_in q_i Omega_{h,i}^T)
+#   dcl_j = Omega_j . o_j - v_j . dv_j             (log-decay chain)
+#   dld_t = sum_{j>=t} dcl_j                       (reverse cumsum)
+#
+# Residuals are {q, k, v, log_decay, o}: O(N D) — autodiff through the
+# chunk scan would store the O(N C) masked decay/attention blocks.
+# ---------------------------------------------------------------------------
+
+def ssd_bwd_chunked(q, k, v, log_decay, o, omega, chunk: int = 128):
+    """Returns (dq, dk, dv, dlog_decay); dq/dk are group-summed."""
+    bsz, g, n, dk = q.shape
+    h = v.shape[1]
+    dv = v.shape[-1]
+    c = min(chunk, n)
+    n_pad = -(-n // c) * c
+    t = n_pad // c
+
+    qp = _pad_to(q, n_pad, 2)
+    kp = _pad_to(k, n_pad, 2)
+    vp = _group(_pad_to(v, n_pad, 2), g)
+    omp = _group(_pad_to(omega, n_pad, 2), g)
+    ldp = _group(_pad_to(log_decay.astype(F32), n_pad, 2), g)
+
+    q_c, k_c = _chop(qp, t, c), _chop(kp, t, c)
+    v_c, om_c = _chop(vp, t, c), _chop(omp, t, c)
+    ld_c = _chop_l(ldp, t, c)
+    mask_lo = jnp.tril(jnp.ones((c, c), bool))
+
+    # ---- dq: forward scan carrying the same state S as the forward pass
+    def step_q(s, inp):
+        qc, kc, vc, omc, ld = inp
+        cl = jnp.cumsum(ld, axis=-1)
+        total = cl[..., -1:]
+        p = jnp.einsum("bghie,bghne->bghin", omc, vc,
+                       preferred_element_type=F32)
+        diff = cl[..., :, None] - cl[..., None, :]
+        w = p * jnp.where(mask_lo, jnp.exp(diff), 0.0)
+        dq_intra = jnp.einsum("bghin,bgnd->bgid", w, kc,
+                              preferred_element_type=F32)
+        omw = jnp.exp(cl)[..., None] * omc
+        dq_inter = jnp.einsum("bghde,bghie->bgid", s, omw,
+                              preferred_element_type=F32)
+        vw = jnp.exp(total - cl)[..., None] * vc
+        s = jnp.exp(total)[..., None] * s + jnp.einsum(
+            "bgjd,bghje->bghde", kc, vw, preferred_element_type=F32)
+        return s, dq_intra + dq_inter
+
+    s0 = jnp.zeros((bsz, g, h // g, dk, dv), F32)
+    _, dq_all = jax.lax.scan(step_q, s0, (q_c, k_c, v_c, om_c, ld_c))
+
+    # ---- dk, dv: reverse scan carrying U = sum_{later} decayed q Om^T
+    def step_kv(u, inp):
+        qc, kc, vc, omc, ld = inp
+        cl = jnp.cumsum(ld, axis=-1)
+        total = cl[..., -1:]
+        e_n = jnp.exp(total - cl)                        # decay n -> end
+        diff = cl[..., :, None] - cl[..., None, :]
+        m_hi = jnp.where(mask_lo.T, jnp.exp(diff.swapaxes(-1, -2)), 0.0)
+        # m_hi[n, i] = exp(cl_i - cl_n) for i >= n
+        p = jnp.einsum("bghie,bghne->bghni", omc, vc,
+                       preferred_element_type=F32)       # p[n,i]=Om_i.v_n
+        dk_intra = jnp.einsum("bghni,bgid->bgnd", p * m_hi, qc,
+                              preferred_element_type=F32)
+        s_qk = jnp.einsum("bgid,bgnd->bgni", qc, kc,
+                          preferred_element_type=F32)    # s[n,i]=q_i.k_n
+        w2 = s_qk[:, :, None] * m_hi
+        dv_intra = jnp.einsum("bghni,bghie->bghne", w2, omc,
+                              preferred_element_type=F32)
+        vw = e_n[..., None] * vc
+        dk_inter = jnp.einsum("bghde,bghne->bgnd", u, vw,
+                              preferred_element_type=F32)
+        dv_inter = e_n[..., None] * jnp.einsum(
+            "bghde,bgnd->bghne", u, kc, preferred_element_type=F32)
+        omw = jnp.exp(cl)[..., None] * omc
+        u = jnp.exp(total)[..., None] * u + jnp.einsum(
+            "bgid,bghie->bghde", qc, omw, preferred_element_type=F32)
+        return u, (dk_intra + dk_inter, dv_intra + dv_inter)
+
+    u0 = jnp.zeros((bsz, g, h // g, dk, dv), F32)
+    _, (dk_all, dv_all) = jax.lax.scan(
+        step_kv, u0, (q_c, k_c, v_c, om_c, ld_c), reverse=True)
+
+    dq_o = jnp.moveaxis(dq_all, 0, 2).reshape(bsz, g, n_pad, dk)[:, :, :n]
+    dk_o = jnp.moveaxis(dk_all, 0, 2).reshape(bsz, g, n_pad, dk)[:, :, :n]
+    dv_o = jnp.moveaxis(dv_all, 0, 3).reshape(bsz, h, n_pad, dv)[:, :, :n]
+
+    # ---- dlog_decay: dcl_j = Om_j.o_j - v_j.dv_j; dld = reverse cumsum
+    dcl = (jnp.sum(omega.astype(F32) * o.astype(F32), -1)
+           - jnp.sum(v.astype(F32) * dv_o, -1))           # (B, H, N)
+    dld = jnp.cumsum(dcl[..., ::-1], axis=-1)[..., ::-1]
+    return (dq_o.astype(q.dtype), dk_o.astype(k.dtype),
+            dv_o.astype(v.dtype), dld.astype(log_decay.dtype))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def ssd_causal(q, k, v, log_decay, chunk: int = 128):
+    """SSD with the analytic O(N D) backward (training entry point).
+
+    q, k: (B, G, N, Dk) with G | H; v: (B, H, N, Dv); ld: (B, H, N).
+    """
+    o, _ = ssd_fwd_chunked(q, k, v, log_decay, chunk=chunk)
+    return o
+
+
+def _ssd_fwd(q, k, v, log_decay, chunk):
+    if jax.default_backend() == "tpu":
+        from repro.kernels.ssd import ssd_fwd_pallas
+        o = ssd_fwd_pallas(q, k, v, log_decay, chunk=chunk)
+    else:
+        o, _ = ssd_fwd_chunked(q, k, v, log_decay, chunk=chunk)
+    return o, (q, k, v, log_decay, o)
+
+
+def _ssd_bwd(chunk, res, omega):
+    q, k, v, log_decay, o = res
+    if jax.default_backend() == "tpu":
+        from repro.kernels.ssd import ssd_bwd_pallas
+        return ssd_bwd_pallas(q, k, v, log_decay, o, omega, chunk=chunk)
+    return ssd_bwd_chunked(q, k, v, log_decay, o, omega, chunk=chunk)
+
+
+ssd_causal.defvjp(_ssd_fwd, _ssd_bwd)

@@ -1,0 +1,107 @@
+"""Token data pipeline: synthetic + memmap sources, per-host sharding,
+background prefetch.
+
+At 1000+ nodes each host reads only its shard of the global batch
+(process_index-strided windows); the arrays produced here are the
+per-host slice which launch/train.py turns into a globally-sharded
+jax.Array via make_array_from_process_local_data.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import numpy as np
+
+
+class SyntheticLM:
+    """Deterministic synthetic token stream (Zipf-ish marginals).
+
+    Reproducible across restarts: batch `i` depends only on (seed, i),
+    which is what lets a resumed job replay the exact stream.
+    """
+
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 seed: int = 0):
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.host_batch = global_batch // jax.process_count()
+
+    def __iter__(self):
+        i = 0
+        while True:
+            yield self.batch_at(i)
+            i += 1
+
+    def batch_at(self, i: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, i, jax.process_index()]))
+        # Zipf-like marginal over the vocab, cheap to sample
+        u = rng.random((self.host_batch, self.seq))
+        toks = ((self.vocab - 1) * u ** 3).astype(np.int32) + 1
+        return toks
+
+
+class MemmapLM:
+    """Flat binary token file (np.int32), strided across hosts.
+
+    Window w of host h starts at ((w * hosts + h) * host_batch * seq)
+    tokens, wrapping modulo file length — the standard "each host owns a
+    disjoint stride" layout.
+    """
+
+    def __init__(self, path: str, seq_len: int, global_batch: int):
+        self.data = np.memmap(path, dtype=np.int32, mode="r")
+        self.seq = seq_len
+        self.global_batch = global_batch
+        self.host_batch = global_batch // jax.process_count()
+
+    def batch_at(self, i: int) -> np.ndarray:
+        need = self.host_batch * self.seq
+        start = ((i * jax.process_count() + jax.process_index()) * need) \
+            % max(len(self.data) - need, 1)
+        return np.asarray(self.data[start:start + need]).reshape(
+            self.host_batch, self.seq)
+
+    def __iter__(self):
+        i = 0
+        while True:
+            yield self.batch_at(i)
+            i += 1
+
+
+class Prefetcher:
+    """Background-thread prefetch of a batch iterator (depth-bounded)."""
+
+    def __init__(self, it, depth: int = 2):
+        self.q = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            for item in it:
+                if self._stop.is_set():
+                    return
+                self.q.put(item)
+            self.q.put(None)
+
+        self.t = threading.Thread(target=worker, daemon=True)
+        self.t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            self.q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,26 @@
+"""Byte-level tokenizer (self-contained; no external vocab files).
+
+Used by the examples and the Wiki-40B-style training driver: UTF-8 bytes
+with offsets for special tokens.  A production deployment would swap in
+a BPE tokenizer; the data pipeline only needs encode/decode + vocab_size.
+"""
+from __future__ import annotations
+
+PAD, BOS, EOS = 0, 1, 2
+SPECIALS = 3
+
+
+class ByteTokenizer:
+    vocab_size = 256 + SPECIALS
+
+    def encode(self, text: str, bos: bool = True, eos: bool = False):
+        ids = [b + SPECIALS for b in text.encode("utf-8")]
+        if bos:
+            ids = [BOS] + ids
+        if eos:
+            ids = ids + [EOS]
+        return ids
+
+    def decode(self, ids) -> str:
+        data = bytes(i - SPECIALS for i in ids if i >= SPECIALS)
+        return data.decode("utf-8", errors="replace")

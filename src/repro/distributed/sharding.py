@@ -1,0 +1,194 @@
+"""Sharding rules: parameters, optimizer state, activations, batches.
+
+Strategy (designed for 1000+ chips; validated on the 256/512-chip
+dry-run meshes):
+
+* Parameters — 2D "FSDP x TP": for every >=2D weight, the two largest
+  dims are sharded over ("data", "model") — largest over the axis with
+  more headroom — so a 236B-param model fits per-device HBM.  The
+  "pod" axis (multi-pod mesh) replicates params; gradients all-reduce
+  over it (classic cross-pod DP).  1D params (norm scales, biases)
+  replicate.
+* Expert weights (E, d_in, d_out) — experts over "model" (expert
+  parallelism), d over "data".
+* Optimizer state — same PartitionSpec as its param (ZeRO-style: the
+  FSDP dim already shards moments 16-way; see distributed/zero.py).
+* Batches — leading batch dim over ("pod", "data") when divisible,
+  else over whatever prefix divides (long_500k has batch 1 ->
+  replicated; its parallelism comes from TP).
+
+Divisibility is always checked against the actual mesh axis sizes;
+non-divisible dims fall back to the next candidate axis or replicate.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis] if axis in mesh.shape else 1
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter given its tree path and shape.
+
+    On the multi-pod mesh the FSDP dim extends over ("pod", "data") —
+    a 236B model's f32 master+moments would not fit 16 GB/chip with the
+    pod axis pure-DP (grads still reduce over pod; XLA emits
+    reduce-scatter + all-gather instead of all-reduce).
+    """
+    pod = _axis_size(mesh, "pod")
+    data_ax = "data" if "data" in mesh.shape else None
+    if pod > 1 and data_ax:
+        data_ax = ("pod", "data")
+    model_ax = "model" if "model" in mesh.shape else None
+    d = _axis_size(mesh, "data") * pod
+    m = _axis_size(mesh, "model")
+
+    if len(shape) <= 1:
+        return P()
+
+    # embedding tables: shard the vocab dim over "model" when it
+    # divides; otherwise keep d_model UNSHARDED on "model" (a d-sharded
+    # table turns every token gather into a cross-shard dynamic-slice —
+    # XLA's partitioner rejects it inside the grad-accumulation scan)
+    # and fall back to FSDP on d over "data".
+    if "embed" in path and len(shape) == 2:
+        v_dim, d_dim = shape
+        if v_dim % m == 0:
+            return P("model", "data" if d_dim % d == 0 else None)
+        return P(None, "data" if d_dim % d == 0 else None)
+
+    # stacked-layer / stacked-expert leading dims: never shard the layer
+    # axis (scan iterates it); shard experts over model.
+    spec = [None] * len(shape)
+    dims = list(range(len(shape)))
+    is_expert = "experts" in path or "shared" in path
+    if "blocks" in path or "groups" in path or "tail" in path:
+        # leading stacked-layer dim(s): (L, ...) or (G, P, ...)
+        lead = 2 if "groups" in path else 1
+        dims = dims[lead:]
+    if is_expert and len(dims) >= 3:
+        e_dim = dims[0]
+        if shape[e_dim] % m == 0:
+            spec[e_dim] = model_ax
+        rest = dims[1:]
+        # FSDP over the largest remaining dim
+        rest_sorted = sorted(rest, key=lambda i: -shape[i])
+        for i in rest_sorted:
+            if shape[i] % d == 0:
+                spec[i] = data_ax
+                break
+        return P(*spec)
+
+    if not dims:
+        return P(*spec)
+    # generic 2D+ weight: model-shard the largest dim, data-shard (FSDP)
+    # the second largest; fall back / skip when not divisible.
+    order = sorted(dims, key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is None and model_ax and shape[i] % m == 0:
+            spec[i] = model_ax
+            break
+    for i in order:
+        if spec[i] is None and data_ax and shape[i] % d == 0:
+            spec[i] = data_ax
+            break
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    """NamedShardings for a params pytree (of arrays or ShapeDtypeStructs)."""
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path), leaf.shape,
+                                              mesh))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes
+
+
+def batch_spec(shape: tuple, mesh: Mesh, batch_dim: int = 0) -> P:
+    """Shard the batch dim over ("pod","data") — as much as divides."""
+    axes = batch_axes(mesh)
+    b = shape[batch_dim]
+    chosen = []
+    prod = 1
+    for a in axes:
+        if b % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    spec = [None] * len(shape)
+    if chosen:
+        spec[batch_dim] = tuple(chosen) if len(chosen) > 1 else chosen[0]
+    return P(*spec)
+
+
+def batch_shardings(batch_shape, mesh: Mesh):
+    """Shardings for an input-batch pytree.
+
+    tokens/labels/frames: batch-dim 0; vlm positions (3, B, N): batch-dim 1.
+    """
+    def one(path, leaf):
+        p = _path_str(path)
+        bdim = 1 if p.startswith("positions") else 0
+        return NamedSharding(mesh, batch_spec(leaf.shape, mesh, bdim))
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def _cache_spec(path: str, shape: tuple, mesh: Mesh) -> P:
+    """Decode-cache leaves: (L, B, H, ...) or (G, P, B, ...) or (B, ...).
+
+    Stacked layer dims are never sharded (scan iterates them); batch
+    shards over ("pod","data"); the head dim (right after batch) shards
+    over "model" when divisible.
+    """
+    if len(shape) == 0:
+        return P()
+    lead = 0
+    if any(s in path for s in ("blocks", "self", "cross", "shared",
+                               "tail")):
+        lead = 1
+    if "mamba" in path:
+        lead = 2
+    if len(shape) <= lead:
+        return P()
+    spec = [None] * len(shape)
+    bdim = lead
+    bspec = batch_spec((shape[bdim],), mesh, 0)[0]
+    spec[bdim] = bspec
+    # shard the head dim over model when divisible (dim after batch)
+    m = _axis_size(mesh, "model")
+    if len(shape) > bdim + 1 and shape[bdim + 1] % m == 0 and m > 1:
+        spec[bdim + 1] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_shape, mesh: Mesh):
+    """Shardings for a decode-cache pytree (model.init_cache structure)."""
+    def one(path, leaf):
+        return NamedSharding(mesh, _cache_spec(_path_str(path), leaf.shape,
+                                               mesh))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def activation_spec(mesh: Mesh, batch: int, with_model: bool = False) -> P:
+    """(B, N, D) activations: batch over ("pod","data")."""
+    bspec = batch_spec((batch,), mesh, 0)[0]
+    return P(bspec, None, "model" if with_model else None)

@@ -1,0 +1,51 @@
+"""ZeRO-style optimizer-state sharding.
+
+With the 2D FSDP x TP param layout (distributed/sharding.py) the Adam
+moments inherit the param spec — already sharded data*model-way.  For
+params that could NOT be data-sharded (small or non-divisible dims),
+this module adds a ZeRO-1 pass: their f32 moments are sharded over the
+"data" axis on the largest divisible dim, cutting replicated optimizer
+memory by the data-parallel degree.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import _path_str, param_spec
+
+
+def _flat_axes(spec) -> set:
+    out = set()
+    for s in spec:
+        if isinstance(s, tuple):
+            out.update(s)
+        elif s is not None:
+            out.add(s)
+    return out
+
+
+def moment_spec(path: str, shape: tuple, mesh: Mesh) -> P:
+    base = param_spec(path, shape, mesh)
+    if "data" in _flat_axes(base) or "data" not in mesh.shape \
+            or len(shape) < 1:
+        return base
+    d = mesh.shape["data"]
+    spec = list(base) + [None] * (len(shape) - len(base))
+    # find the largest dim not already sharded that divides by data
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is None and shape[i] % d == 0 and shape[i] >= d:
+            spec[i] = "data"
+            break
+    return P(*spec)
+
+
+def opt_state_shardings(opt_state_shape, mesh: Mesh):
+    """NamedShardings for an AdamWState pytree (step replicated)."""
+    def one(path, leaf):
+        if leaf.ndim == 0:  # step counter
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, moment_spec(_path_str(path), leaf.shape,
+                                               mesh))
+    return jax.tree_util.tree_map_with_path(one, opt_state_shape)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel — causal flash attention forward (baseline).
+
+The paper benchmarks against FlashAttention-2 (Dao, 2024); this is the
+TPU analogue used by the benchmark harness: online-softmax with running
+max/sum in VMEM scratch, grid (B, H, N/Cq, N/Ck), KV blocks streamed and
+skipped above the causal diagonal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, blocks_k: int):
+    tq = pl.program_id(2)
+    tk = pl.program_id(3)
+
+    @pl.when(tk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cq = q_ref.shape[2]
+    ck = k_ref.shape[2]
+
+    @pl.when(tk * ck < (tq + 1) * cq)  # KV block intersects causal triangle
+    def _step():
+        q = q_ref[0, 0].astype(F32)
+        k = k_ref[0, 0].astype(F32)
+        v = v_ref[0, 0].astype(F32)
+        s = scale * jnp.dot(q, k.T, preferred_element_type=F32)
+        # global causal mask: row tq*cq+i attends to col tk*ck+j iff >=
+        ii = tq * cq + lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+        jj = tk * ck + lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+        s = jnp.where(ii >= jj, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = corr * l_ref[...] + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=F32)
+        m_ref[...] = m_new
+
+    @pl.when(tk == blocks_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, scale: float | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """Causal softmax attention.  q,k,v: (B,H,N,D) (KV heads pre-expanded)."""
+    bsz, h, n, d = q.shape
+    scale = (1.0 / d**0.5) if scale is None else scale
+    cq, ck = min(block_q, n), min(block_k, n)
+    n_pad = -(-n // max(cq, ck)) * max(cq, ck)
+    if n_pad != n:
+        w = [(0, 0), (0, 0), (0, n_pad - n), (0, 0)]
+        # padded keys fall outside every real row's causal window (j > i),
+        # so they are masked to -inf; padded query rows are sliced away.
+        q, k, v = jnp.pad(q, w), jnp.pad(k, w), jnp.pad(v, w)
+    tq, tk = n_pad // cq, n_pad // ck
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, blocks_k=tk),
+        grid=(bsz, h, tq, tk),
+        in_specs=[
+            pl.BlockSpec((1, 1, cq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, ck, d), lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, ck, d), lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, n_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((cq, d), F32),
+            pltpu.VMEM((cq, 1), F32),
+            pltpu.VMEM((cq, 1), F32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :n]

@@ -1,0 +1,104 @@
+"""Pure-jnp quadratic oracles for every kernel in this package.
+
+These materialize the full N x N attention matrix and are used only as
+correctness references in tests and benchmarks.  All accumulation is f32.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _expand_kv(x: jnp.ndarray, num_q_heads: int) -> jnp.ndarray:
+    """Repeat KV heads (B, Hkv, N, D) -> (B, H, N, D) for grouped queries."""
+    b, hkv, n, d = x.shape
+    if hkv == num_q_heads:
+        return x
+    assert num_q_heads % hkv == 0, (num_q_heads, hkv)
+    g = num_q_heads // hkv
+    return jnp.repeat(x, g, axis=1)
+
+
+def la_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    a: float = 1.0,
+    b: float = 1.0,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Normalized linear attention, paper Eq. 4.
+
+    o_ij = sum_n (a + b q_i.k_n) v_nj / sum_n (a + b q_i.k_n)
+
+    q: (B, H, Nq, D); k, v: (B, Hkv, Nk, D) with Hkv | H.
+    Returns (B, H, Nq, D) in q.dtype.  O(N^2 D) time, O(N^2) memory —
+    reference only.
+    """
+    out_dtype = q.dtype
+    h = q.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    s = jnp.einsum("bhid,bhjd->bhij", qf, kf)
+    w = a + b * s
+    if causal:
+        nq, nk = w.shape[-2], w.shape[-1]
+        mask = jnp.tril(jnp.ones((nq, nk), dtype=bool), k=nk - nq)
+        w = jnp.where(mask, w, 0.0)
+    g = w.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhij,bhjd->bhid", w, vf) / g
+    return o.astype(out_dtype)
+
+
+def softmax_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Regular softmax attention oracle (paper Eq. 2/3)."""
+    out_dtype = q.dtype
+    h, d = q.shape[1], q.shape[-1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    scale = (1.0 / d**0.5) if scale is None else scale
+    s = jnp.einsum("bhid,bhjd->bhij", qf, kf) * scale
+    if causal:
+        nq, nk = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((nq, nk), dtype=bool), k=nk - nq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhij,bhjd->bhid", p, vf)
+    return o.astype(out_dtype)
+
+
+def ssd_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_decay: jnp.ndarray,
+) -> jnp.ndarray:
+    """State-space-duality (Mamba-2) oracle: scalar-decay linear attention.
+
+    Recurrence (paper Appendix B, Table 3, Mamba-2 row):
+        S_t = gamma_t S_{t-1} + k_t v_t^T,   o_t = q_t S_t
+    with gamma_t = exp(log_decay_t) in (0, 1].
+
+    q, k: (B, H, N, Dk); v: (B, H, N, Dv); log_decay: (B, H, N) <= 0.
+    Materializes M_in = prod_{m=n+1..i} gamma_m via cumulative log sums.
+    """
+    out_dtype = v.dtype
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    ld = log_decay.astype(jnp.float32)
+    cl = jnp.cumsum(ld, axis=-1)  # (B,H,N) cumulative log decay
+    # M[i, n] = exp(cl_i - cl_n) for n <= i else 0
+    diff = cl[..., :, None] - cl[..., None, :]
+    n = diff.shape[-1]
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    m = jnp.where(mask, jnp.exp(diff), 0.0)
+    s = jnp.einsum("bhid,bhjd->bhij", qf, kf) * m
+    o = jnp.einsum("bhij,bhjd->bhid", s, vf)
+    return o.astype(out_dtype)

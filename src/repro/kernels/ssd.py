@@ -1,0 +1,269 @@
+"""Pallas TPU kernels — chunked SSD (Mamba-2) forward AND backward.
+
+Same grid/scratch scheme as kernels/linear_attention.py with a per-token
+scalar decay carried in log space.  The backward implements the analytic
+gradient of core/ssd.py (the paper's Eqs. 19-21 discipline extended to
+the decay-gated mixer):
+
+    dq_i = S_i @ Om_i                 (forward chunk scan, same state S)
+    dk_n = U_n @ v_n, dv_n = U_n^T k_n (reverse scan, U = decayed q Om^T)
+    dld  = reverse-cumsum(Om.o - v.dv) (computed by the caller)
+
+Grouped q/k (G | H) is read through hi // group index maps, so the
+shared Mamba-2 B/C projections are never repeated in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _ssd_kernel(q_ref, k_ref, v_ref, ld_ref, o_ref, s_ref):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q = q_ref[0, 0].astype(F32)
+    k = k_ref[0, 0].astype(F32)
+    v = v_ref[0, 0].astype(F32)
+    ld = ld_ref[0, 0].astype(F32)
+    c = q.shape[0]
+
+    cl = jnp.cumsum(ld)
+    total = cl[c - 1]
+    att = jnp.dot(q, k.T, preferred_element_type=F32)
+    diff = cl[:, None] - cl[None, :]
+    ii = lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    jj = lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    att = att * jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+    o = (jnp.dot(att, v, preferred_element_type=F32)
+         + jnp.exp(cl)[:, None]
+         * jnp.dot(q, s_ref[...], preferred_element_type=F32))
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+    kw = jnp.exp(total - cl)[:, None] * k
+    s_ref[...] = (jnp.exp(total) * s_ref[...]
+                  + jnp.dot(kw.T, v, preferred_element_type=F32))
+
+
+def ssd_fwd_pallas(q, k, v, log_decay, chunk: int = 128,
+                   interpret: bool = False):
+    """q, k: (B,G,N,Dk) shared per group (G | H, Mamba-2 style); v:
+    (B,H,N,Dv); log_decay: (B,H,N).  Returns o: (B,H,N,Dv).
+
+    The grouped q/k blocks are read through an hi // group index map —
+    no per-head repetition is materialized in HBM (same trick as the
+    LA kernel's GQA handling).
+    """
+    bsz, g, n, dk = q.shape
+    h = v.shape[1]
+    group = h // g
+    dv = v.shape[-1]
+    c = min(chunk, n)
+    n_pad = -(-n // c) * c
+    t = n_pad // c
+
+    def pad(x):
+        if x.shape[2] == n_pad:
+            return x
+        w = [(0, 0)] * x.ndim
+        w[2] = (0, n_pad - x.shape[2])
+        return jnp.pad(x, w)
+
+    q, k, v = pad(q), pad(k), pad(v)
+    log_decay = pad(log_decay[..., None])[..., 0]
+
+    o = pl.pallas_call(
+        _ssd_kernel,
+        grid=(bsz, h, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, dk),
+                         lambda bi, hi, ti: (bi, hi // group, ti, 0)),
+            pl.BlockSpec((1, 1, c, dk),
+                         lambda bi, hi, ti: (bi, hi // group, ti, 0)),
+            pl.BlockSpec((1, 1, c, dv), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, c), lambda bi, hi, ti: (bi, hi, ti)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, c, dv),
+                               lambda bi, hi, ti: (bi, hi, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, n_pad, dv), v.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), F32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, log_decay)
+    return o[:, :, :n]
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+def _ssd_bwd_q_kernel(k_ref, v_ref, om_ref, ld_ref, dq_ref, s_ref):
+    """Forward scan: dq_i = S_i @ Om_i (per-head partials; the caller
+    sums over the group)."""
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    k = k_ref[0, 0].astype(F32)
+    v = v_ref[0, 0].astype(F32)
+    om = om_ref[0, 0].astype(F32)
+    ld = ld_ref[0, 0].astype(F32)
+    c = k.shape[0]
+
+    cl = jnp.cumsum(ld)
+    total = cl[c - 1]
+    ii = lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    jj = lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    # w[i, n] = (Om_i . v_n) exp(cl_i - cl_n), n <= i
+    p = jnp.dot(om, v.T, preferred_element_type=F32)
+    diff = cl[:, None] - cl[None, :]
+    w = p * jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+    dq = (jnp.dot(w, k, preferred_element_type=F32)
+          + jnp.exp(cl)[:, None]
+          * jnp.dot(om, s_ref[...].T, preferred_element_type=F32))
+    dq_ref[0, 0] = dq.astype(dq_ref.dtype)
+
+    kw = jnp.exp(total - cl)[:, None] * k
+    s_ref[...] = (jnp.exp(total) * s_ref[...]
+                  + jnp.dot(kw.T, v, preferred_element_type=F32))
+
+
+def _ssd_bwd_kv_kernel(q_ref, k_ref, v_ref, om_ref, ld_ref, dk_ref, dv_ref,
+                       u_ref):
+    """Reverse scan: U_n = sum_{i>=n} exp(cl_i - cl_n) q_i Om_i^T;
+    dk_n = U_n v_n (group-partial), dv_n = U_n^T k_n."""
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    q = q_ref[0, 0].astype(F32)
+    k = k_ref[0, 0].astype(F32)
+    v = v_ref[0, 0].astype(F32)
+    om = om_ref[0, 0].astype(F32)
+    ld = ld_ref[0, 0].astype(F32)
+    c = q.shape[0]
+
+    cl = jnp.cumsum(ld)
+    total = cl[c - 1]
+    e_n = jnp.exp(total - cl)
+    nn = lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    ii = lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    m_hi = jnp.where(ii >= nn, jnp.exp(cl[None, :] - cl[:, None]), 0.0)
+
+    p = jnp.dot(v, om.T, preferred_element_type=F32)      # p[n,i]=Om_i.v_n
+    dk = (jnp.dot(p * m_hi, q, preferred_element_type=F32)
+          + e_n[:, None] * jnp.dot(v, u_ref[...].T,
+                                   preferred_element_type=F32))
+    dk_ref[0, 0] = dk.astype(dk_ref.dtype)
+
+    s_qk = jnp.dot(k, q.T, preferred_element_type=F32)    # s[n,i]=q_i.k_n
+    dv = (jnp.dot(s_qk * m_hi, om, preferred_element_type=F32)
+          + e_n[:, None] * jnp.dot(k, u_ref[...],
+                                   preferred_element_type=F32))
+    dv_ref[0, 0] = dv.astype(dv_ref.dtype)
+
+    qw = jnp.exp(cl)[:, None] * q
+    u_ref[...] = (jnp.exp(total) * u_ref[...]
+                  + jnp.dot(qw.T, om, preferred_element_type=F32))
+
+
+def ssd_bwd_pallas(q, k, v, log_decay, o, omega, chunk: int = 128,
+                   interpret: bool = False):
+    """Analytic SSD backward on TPU.  q, k: (B,G,N,Dk); v/o/omega:
+    (B,H,N,Dv); log_decay: (B,H,N).  Returns (dq, dk, dv, dld) with
+    dq/dk group-summed to (B,G,N,Dk)."""
+    bsz, g, n, dk = q.shape
+    h = v.shape[1]
+    group = h // g
+    dv_d = v.shape[-1]
+    c = min(chunk, n)
+    n_pad = -(-n // c) * c
+    t = n_pad // c
+
+    def pad(x):
+        if x.shape[2] == n_pad:
+            return x
+        w = [(0, 0)] * x.ndim
+        w[2] = (0, n_pad - x.shape[2])
+        return jnp.pad(x, w)
+
+    qp, kp, vp, omp = pad(q), pad(k), pad(v), pad(omega)
+    ldp = pad(log_decay[..., None])[..., 0]
+
+    # dq: per-head partials, grid over H; summed over the group after
+    dq_part = pl.pallas_call(
+        _ssd_bwd_q_kernel,
+        grid=(bsz, h, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, dk),
+                         lambda bi, hi, ti: (bi, hi // group, ti, 0)),
+            pl.BlockSpec((1, 1, c, dv_d),
+                         lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, c, dv_d),
+                         lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, c), lambda bi, hi, ti: (bi, hi, ti)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, c, dk),
+                               lambda bi, hi, ti: (bi, hi, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, n_pad, dk), F32),
+        scratch_shapes=[pltpu.VMEM((dk, dv_d), F32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kp, vp, omp, ldp)
+    dq = dq_part.reshape(bsz, g, group, n_pad, dk).sum(2)[:, :, :n]
+
+    rev = lambda ti: t - 1 - ti  # noqa: E731
+    dk_part, dv_o = pl.pallas_call(
+        _ssd_bwd_kv_kernel,
+        grid=(bsz, h, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, dk),
+                         lambda bi, hi, ti: (bi, hi // group, rev(ti), 0)),
+            pl.BlockSpec((1, 1, c, dk),
+                         lambda bi, hi, ti: (bi, hi // group, rev(ti), 0)),
+            pl.BlockSpec((1, 1, c, dv_d),
+                         lambda bi, hi, ti: (bi, hi, rev(ti), 0)),
+            pl.BlockSpec((1, 1, c, dv_d),
+                         lambda bi, hi, ti: (bi, hi, rev(ti), 0)),
+            pl.BlockSpec((1, 1, c), lambda bi, hi, ti: (bi, hi, rev(ti))),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, dk),
+                         lambda bi, hi, ti: (bi, hi, rev(ti), 0)),
+            pl.BlockSpec((1, 1, c, dv_d),
+                         lambda bi, hi, ti: (bi, hi, rev(ti), 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, n_pad, dk), F32),
+            jax.ShapeDtypeStruct((bsz, h, n_pad, dv_d), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv_d), F32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qp, kp, vp, omp, ldp)
+    dk_o = dk_part.reshape(bsz, g, group, n_pad, dk).sum(2)[:, :, :n]
+    dv_o = dv_o[:, :, :n]
+
+    dcl = (jnp.sum(omega.astype(F32) * o.astype(F32), -1)
+           - jnp.sum(v.astype(F32) * dv_o.astype(F32), -1))
+    dld = jnp.cumsum(dcl[..., ::-1], axis=-1)[..., ::-1]
+    return (dq.astype(q.dtype), dk_o.astype(k.dtype),
+            dv_o.astype(v.dtype), dld.astype(log_decay.dtype))

@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax import: jax locks the device count at first init.
+# The 512 placeholder host devices exist ONLY for this dry-run; smoke
+# tests and benches see the real single CPU device.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the full architecture config and ShapeDtypeStruct inputs
+     (no real allocation anywhere — params via jax.eval_shape);
+  2. jits the right step (train_step / prefill_step / serve_step) with
+     the production shardings from distributed/;
+  3. .lower().compile() against the 256-chip single-pod mesh and the
+     512-chip 2-pod mesh — success proves the distribution config is
+     coherent (sharding propagation, collectives, memory);
+  4. records memory_analysis / cost_analysis / per-chip collective bytes
+     into artifacts/dryrun/*.json for the §Roofline tables.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import total_costs
+from repro.analysis.roofline import Roofline, model_flops_for, save_artifact
+from repro.configs.base import SHAPES, TrainConfig
+from repro.configs.registry import ARCHS, get_config, get_shape, input_specs
+from repro.distributed.act_sharding import use_activation_policy
+from repro.distributed.sharding import batch_shardings, cache_shardings, \
+    param_shardings
+from repro.distributed.zero import opt_state_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as mdl
+from repro.optim import adamw
+from repro.train.step import build_prefill_step, build_serve_step, \
+    build_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "artifacts", "dryrun")
+
+
+def _with_shardings(struct, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct, shardings)
+
+
+def _microbatch_for(cfg, shape, chips, budget_bytes: float = 6e9) -> int:
+    """Gradient-accumulation factor so the remat stash (one bf16 block
+    input per layer per microbatch token) fits the per-chip budget."""
+    dp = max(chips // 16, 1)  # data(+pod) degree on the production meshes
+    per_dev_tokens = shape.global_batch * shape.seq_len / dp
+    layers = cfg.num_layers + cfg.encoder_layers
+    stash = per_dev_tokens * cfg.d_model * 2 * layers
+    mb = 1
+    while stash / mb > budget_bytes and mb < shape.global_batch and \
+            shape.global_batch % (mb * 2) == 0:
+        mb *= 2
+    return 0 if mb == 1 else mb
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               smoke: bool = False, cfg=None, donate: bool = True):
+    """Lower+compile one cell.  Returns (compiled, meta dict)."""
+    cfg = cfg or get_config(arch, smoke=smoke)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    specs, kind = input_specs(cfg, shape)
+
+    key_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_s = jax.eval_shape(partial(mdl.init_params, cfg), key_s)
+    params_sh = param_shardings(params_s, mesh)
+    params_in = _with_shardings(params_s, params_sh)
+
+    with use_activation_policy(mesh):
+        if kind == "train":
+            tc = TrainConfig(microbatch=_microbatch_for(cfg, shape, chips))
+            step = build_train_step(cfg, tc)
+            opt_s = jax.eval_shape(adamw.init, params_s)
+            opt_sh = opt_state_shardings(opt_s, mesh)
+            opt_in = _with_shardings(opt_s, opt_sh)
+            batch_in = _with_shardings(specs, batch_shardings(specs, mesh))
+            step_idx = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(step,
+                             donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(params_in, opt_in, batch_in, step_idx)
+        elif kind == "prefill":
+            # chunked prefill for long prompts: windowed state-carrying
+            # passes cap peak activation memory (exact for LA/SSD)
+            window = 8192 if shape.seq_len > 8192 else None
+            fn = build_prefill_step(cfg, window=window)
+            batch_in = _with_shardings(specs, batch_shardings(specs, mesh))
+            lowered = jax.jit(fn).lower(params_in, batch_in)
+        else:  # decode
+            fn = build_serve_step(cfg)
+            cache_s = specs["cache"]
+            cache_in = _with_shardings(cache_s,
+                                       cache_shardings(cache_s, mesh))
+            tok_in = _with_shardings(
+                {"t": specs["tokens"]},
+                batch_shardings({"t": specs["tokens"]}, mesh))["t"]
+            jitted = jax.jit(fn, donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_in, cache_in, tok_in)
+
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()  # raw (loop bodies counted once)
+    struct = total_costs(compiled.as_text())  # trip-count-corrected
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+
+    mem_stats = None
+    if mem is not None:
+        mem_stats = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        }
+        mem_stats["total_per_device"] = (
+            mem_stats["argument_bytes"] + mem_stats["output_bytes"]
+            + mem_stats["temp_bytes"] - mem_stats["alias_bytes"])
+
+    r = Roofline(
+        arch=cfg.name if not smoke else arch,
+        shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=float(struct["flops"]),
+        bytes_per_device=float(struct["bytes"]),
+        collective_bytes=float(struct["collective_bytes"]),
+        model_flops=model_flops_for(cfg, shape),
+        memory_stats=mem_stats,
+        collective_detail={"by_kind": struct["by_kind"],
+                           "raw_hlo_flops": float(cost.get("flops", 0.0)),
+                           "raw_hlo_bytes": float(
+                               cost.get("bytes accessed", 0.0))},
+    ).finalize()
+    return compiled, r
+
+
+def run_cell(arch, shape_name, multi_pod, smoke=False, verbose=True):
+    t0 = time.time()
+    compiled, r = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                             smoke=smoke)
+    dt = time.time() - t0
+    if verbose:
+        print(f"[OK] {arch} x {shape_name} x {r.mesh}  "
+              f"({dt:.1f}s compile)")
+        print(f"     memory_analysis: {compiled.memory_analysis()}")
+        print(f"     structural cost: flops/dev={r.flops_per_device:.3e} "
+              f"bytes/dev={r.bytes_per_device:.3e} (raw cost_analysis "
+              f"flops={r.collective_detail['raw_hlo_flops']:.3e})")
+        print(f"     collectives/chip: {r.collective_bytes:.3e} B "
+              f"{r.collective_detail['by_kind']}")
+        print(f"     roofline: T_comp={r.t_compute:.3e}s "
+              f"T_mem={r.t_memory:.3e}s T_coll={r.t_collective:.3e}s "
+              f"dominant={r.dominant} useful={r.usefulness:.3f}")
+    fn = save_artifact(r, ARTIFACT_DIR)
+    del compiled
+    return r, fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use reduced configs (CI sanity)")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                try:
+                    run_cell(arch, shape_name, multi_pod, smoke=args.smoke)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape_name, multi_pod, str(e)))
+                    print(f"[FAIL] {arch} x {shape_name} x "
+                          f"{'2x16x16' if multi_pod else '16x16'}: {e}")
+                    if not args.continue_on_error:
+                        traceback.print_exc()
+                        raise
+    print(json.dumps({"failures": failures}, indent=1))
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

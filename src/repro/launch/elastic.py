@@ -1,0 +1,63 @@
+"""Elastic re-meshing: rebuild the mesh from the live device set and
+reshard a checkpoint onto it.
+
+At 1000+ nodes, hardware failures shrink the healthy device set; an
+elastic job must (1) decide a new mesh shape from what is alive,
+(2) reload the last checkpoint with shardings for the NEW mesh (the
+checkpoint store device_puts each leaf with any sharding), and
+(3) rescale the data-parallel batch.  This module implements the
+decision logic; the Trainer's straggler monitor triggers it.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import AxisType
+
+from repro.checkpoint import store
+from repro.distributed.sharding import param_shardings
+
+
+def choose_mesh_shape(n_devices: int, model_parallel: int = 16):
+    """Largest (data, model) grid that fits the live device count.
+
+    Keeps the model axis fixed (param layout depends on it — a smaller
+    model axis would not fit the shards) and shrinks the data axis to
+    the largest divisor that fits; leftover devices idle until the next
+    re-mesh window.
+    """
+    if n_devices < model_parallel:
+        raise RuntimeError(
+            f"cannot keep model_parallel={model_parallel} with only "
+            f"{n_devices} devices")
+    data = n_devices // model_parallel
+    # power-of-two data axis keeps batch divisibility stable
+    data = 2 ** int(math.log2(data))
+    return (data, model_parallel)
+
+
+def remesh(devices=None, model_parallel: int = 16):
+    devices = devices if devices is not None else jax.devices()
+    shape = choose_mesh_shape(len(devices), model_parallel)
+    need = shape[0] * shape[1]
+    return jax.make_mesh(shape, ("data", "model"),
+                         devices=devices[:need],
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def restore_on_mesh(ckpt_dir: str, tree_like, mesh, step=None):
+    """Reload a checkpoint resharded for a (possibly different) mesh."""
+    shardings = param_shardings(tree_like, mesh)
+    return store.restore(ckpt_dir, tree_like, step=step,
+                         shardings=shardings)
+
+
+def rescale_batch(global_batch: int, old_mesh, new_mesh) -> int:
+    """Keep per-device batch constant across a re-mesh (linear scaling
+    rule applies to the LR schedule — the Trainer logs the change)."""
+    def dp(mesh):
+        return math.prod(mesh.shape[a] for a in ("pod", "data")
+                         if a in mesh.shape)
+    per_device = global_batch // dp(old_mesh)
+    return per_device * dp(new_mesh)

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first jax init).
+
+Single pod: 256 chips as (16, 16) = ("data", "model").
+Multi-pod:  2 pods x 256 chips as (2, 16, 16) = ("pod", "data", "model");
+the "pod" axis rides DCN, "data"/"model" ride ICI.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()[:need]
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — "
+            "the dry-run sets XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import")
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """Whatever this host has (tests / examples): (1, n_devices)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

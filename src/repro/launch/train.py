@@ -1,0 +1,62 @@
+"""Training launcher: --arch / --shape / --steps CLI.
+
+On this CPU container it runs reduced (smoke) configs end-to-end —
+data pipeline -> jitted train step -> checkpoints — exercising the same
+code path the production mesh uses (launch/dryrun.py proves the full
+configs lower on 256/512 chips).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as mdl
+from repro.train.loop import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="pythia-1.4b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--backend", default=None,
+                    help="linear (paper) | softmax (baseline)")
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-smoke) config — needs real accelerators")
+    ap.add_argument("--checkpoint-dir", default="checkpoints")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    if args.backend:
+        cfg = dataclasses.replace(cfg, attention_backend=args.backend)
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 10, 1),
+                     checkpoint_every=max(args.steps // 2, 1),
+                     checkpoint_dir=args.checkpoint_dir)
+
+    params = mdl.init_params(cfg, jax.random.PRNGKey(tc.seed))
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=tc.seed)
+    trainer = Trainer(cfg, tc, params, data)
+    if args.resume:
+        trainer.try_restore()
+    history = trainer.run(args.steps - trainer.step_idx)
+    print(json.dumps({"first_loss": history[0]["loss"],
+                      "last_loss": history[-1]["loss"],
+                      "steps": len(history),
+                      "stragglers": trainer.monitor.flagged}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,285 @@
+"""Attention token mixer: GQA with the paper's linear backend or softmax.
+
+The `linear` backend IS the paper's contribution (core.linear_attention);
+`softmax` is the Regular-Attention baseline the paper compares against
+(chunked online-softmax on the XLA path — the lax.scan analogue of
+FlashAttention-2 — and kernels.flash_attention on TPU).
+
+Interface (shared by all mixers in this package):
+    init(key, cfg)                          -> params
+    apply(p, cfg, x, positions)             -> y               (causal, train)
+    apply_noncausal(p, cfg, x, ctx, pos)    -> y               (encoder/cross)
+    init_cache(cfg, batch, max_len, dtype)  -> cache
+    prefill(p, cfg, x, positions, cache)    -> (y, cache)
+    decode(p, cfg, x, position, cache)      -> (y, cache)      (x: (B, 1, C))
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.chunked import LAState, init_state
+from repro.distributed.act_sharding import BATCH, MODEL, constrain
+from repro.core.linear_attention import LAConfig, la_attention, \
+    la_attention_decode, la_attention_prefill
+from repro.core.numerics import l2_normalize
+from repro.models.common import dense, dense_init
+from repro.models.rope import apply_rope
+
+F32 = jnp.float32
+
+
+class KVCache(NamedTuple):
+    """Softmax-backend decode cache: O(S) per layer."""
+
+    k: jnp.ndarray  # (B, Hkv, S, hd)
+    v: jnp.ndarray  # (B, Hkv, S, hd)
+
+
+def _la_cfg(cfg) -> LAConfig:
+    la = cfg.la
+    return LAConfig(a=la.a, b=la.b, normalize_qk=la.normalize_qk,
+                    chunk=la.chunk, backend=la.backend)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype=F32):
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, cfg.d_model, cfg.num_heads * hd,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(k2, cfg.d_model, cfg.num_kv_heads * hd,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(k3, cfg.d_model, cfg.num_kv_heads * hd,
+                         bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(k4, cfg.num_heads * hd, cfg.d_model, dtype=dtype),
+    }
+    if cfg.la.learnable_coeffs:
+        # paper §2.2: f(x) = a + b x with learnable per-layer (a, b),
+        # initialized at the Taylor coefficients of exp
+        p["la_a"] = jnp.asarray(cfg.la.a, F32)
+        p["la_b"] = jnp.asarray(cfg.la.b, F32)
+    return p
+
+
+def _split_heads(x, heads, hd):
+    b, n, _ = x.shape
+    return x.reshape(b, n, heads, hd).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, n, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * hd)
+
+
+def _project_qkv(p, cfg, x, positions, compute_dtype, rope: bool = True):
+    hd = cfg.resolved_head_dim
+    q = _split_heads(dense(p["wq"], x, compute_dtype), cfg.num_heads, hd)
+    k = _split_heads(dense(p["wk"], x, compute_dtype), cfg.num_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], x, compute_dtype), cfg.num_kv_heads, hd)
+    if rope and cfg.rope_kind not in ("none", "sinusoid"):
+        q = apply_rope(q, positions, cfg.rope_kind, cfg.rope_fraction,
+                       cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_kind, cfg.rope_fraction,
+                       cfg.rope_theta, cfg.mrope_sections)
+    q = constrain(q, BATCH, MODEL, None, None)
+    k = constrain(k, BATCH, MODEL, None, None)
+    v = constrain(v, BATCH, MODEL, None, None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Softmax baseline — chunked online softmax (O(N) memory on any backend)
+# ---------------------------------------------------------------------------
+
+def softmax_chunked(q, k, v, *, causal: bool = True, chunk: int = 512):
+    """q: (B,H,Nq,D); k,v: (B,Hkv,Nk,D).  Online-softmax over KV chunks."""
+    b, h, nq, d = q.shape
+    dv = v.shape[-1]
+    hkv, nk = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / d ** 0.5
+    c = min(chunk, nk)
+    t = -(-nk // c)
+    nk_pad = t * c
+    padw = [(0, 0), (0, 0), (0, nk_pad - nk), (0, 0)]
+    kp, vp = jnp.pad(k, padw), jnp.pad(v, padw)
+    k_c = jnp.moveaxis(kp.reshape(b, hkv, t, c, d), 2, 0)
+    v_c = jnp.moveaxis(vp.reshape(b, hkv, t, c, dv), 2, 0)
+    qg = q.reshape(b, hkv, g, nq, d).astype(F32)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (nq, c), 0)
+    offs = nk - nq  # causal offset: query i is global position i + offs
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, ti = inp
+        s = scale * jnp.einsum("bhgid,bhjd->bhgij", qg, kc.astype(F32),
+                               preferred_element_type=F32)
+        jk = ti * c + jax.lax.broadcasted_iota(jnp.int32, (nq, c), 1)
+        mask = jk < nk  # padded keys never attend
+        if causal:
+            mask = mask & (iq + offs >= jk)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m_new)
+        pmat = jnp.exp(s - m_new[..., None])
+        l = corr * l + pmat.sum(-1)
+        acc = corr[..., None] * acc + jnp.einsum(
+            "bhgij,bhjd->bhgid", pmat, vc.astype(F32),
+            preferred_element_type=F32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, nq), -1e30, F32)
+    l0 = jnp.zeros((b, hkv, g, nq), F32)
+    a0 = jnp.zeros((b, hkv, g, nq, dv), F32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (k_c, v_c, jnp.arange(t)))
+    o = acc / l[..., None]
+    return o.reshape(b, h, nq, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Apply — train / encoder / serving
+# ---------------------------------------------------------------------------
+
+def attn_apply(p, cfg, x, positions, compute_dtype=None):
+    """Causal self-attention over the full sequence (training path)."""
+    q, k, v = _project_qkv(p, cfg, x, positions, compute_dtype)
+    if cfg.attention_backend == "linear":
+        if "la_a" in p:  # learnable coefficients (paper §2.2)
+            from repro.core.numerics import l2_normalize
+            from repro.kernels.ops import la_causal_learnable
+            if cfg.la.normalize_qk:
+                q, k = l2_normalize(q), l2_normalize(k)
+            o = la_causal_learnable(q, k, v, p["la_a"], p["la_b"],
+                                    cfg.la.chunk, cfg.la.backend)
+        else:
+            o = la_attention(q, k, v, _la_cfg(cfg), causal=True)
+    else:
+        o = softmax_chunked(q, k, v, causal=True)
+    return dense(p["wo"], _merge_heads(o), compute_dtype)
+
+
+def attn_apply_noncausal(p, cfg, x, ctx, positions=None, compute_dtype=None):
+    """Bidirectional attention: self (ctx=x, encoder) or cross (ctx=enc)."""
+    hd = cfg.resolved_head_dim
+    q = _split_heads(dense(p["wq"], x, compute_dtype), cfg.num_heads, hd)
+    k = _split_heads(dense(p["wk"], ctx, compute_dtype), cfg.num_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], ctx, compute_dtype), cfg.num_kv_heads, hd)
+    if positions is not None and cfg.rope_kind not in ("none", "sinusoid"):
+        q = apply_rope(q, positions, cfg.rope_kind, cfg.rope_fraction,
+                       cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_kind, cfg.rope_fraction,
+                       cfg.rope_theta, cfg.mrope_sections)
+    if cfg.attention_backend == "linear":
+        o = la_attention(q, k, v, _la_cfg(cfg), causal=False)
+    else:
+        o = softmax_chunked(q, k, v, causal=False)
+    return dense(p["wo"], _merge_heads(o), compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Serving caches
+# ---------------------------------------------------------------------------
+
+def attn_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    if cfg.attention_backend == "linear":
+        # paper's deployment story: O(D^2) state, independent of max_len
+        return init_state(batch, cfg.num_kv_heads, hd, hd)
+    return KVCache(
+        k=jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+        v=jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+    )
+
+
+def attn_prefill(p, cfg, x, positions, cache, compute_dtype=None):
+    q, k, v = _project_qkv(p, cfg, x, positions, compute_dtype)
+    if cfg.attention_backend == "linear":
+        o, cache = la_attention_prefill(q, k, v, _la_cfg(cfg), state=cache)
+    else:
+        n = k.shape[2]
+        cache = KVCache(
+            k=jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0)),
+            v=jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0)))
+        o = softmax_chunked(q, k, v, causal=True)
+    return dense(p["wo"], _merge_heads(o), compute_dtype), cache
+
+
+def attn_decode(p, cfg, x, position, cache, compute_dtype=None):
+    """x: (B, 1, C); position: (B, 1) absolute position of the new token."""
+    q, k, v = _project_qkv(p, cfg, x, position, compute_dtype)
+    if cfg.attention_backend == "linear":
+        cache, o = la_attention_decode(
+            cache, q[:, :, 0], k[:, :, 0], v[:, :, 0], _la_cfg(cfg))
+        o = o[:, :, None]  # (B, H, 1, D)
+    else:
+        pos = position[0, 0]
+        cache = KVCache(
+            k=jax.lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, 0, pos, 0)),
+            v=jax.lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, 0, pos, 0)))
+        klen = pos + 1
+        b, hkv, s, hd = cache.k.shape
+        mask_j = jax.lax.broadcasted_iota(jnp.int32, (s,), 0) < klen
+        g = cfg.num_heads // hkv
+        qg = q.reshape(b, hkv, g, 1, hd).astype(F32)
+        s_ = jnp.einsum("bhgid,bhjd->bhgij", qg, cache.k.astype(F32),
+                        preferred_element_type=F32) / hd ** 0.5
+        s_ = jnp.where(mask_j[None, None, None, None, :], s_, -1e30)
+        pmat = jax.nn.softmax(s_, axis=-1)
+        o = jnp.einsum("bhgij,bhjd->bhgid", pmat, cache.v.astype(F32),
+                       preferred_element_type=F32)
+        o = o.reshape(b, cfg.num_heads, 1, hd).astype(x.dtype)
+    return dense(p["wo"], _merge_heads(o), compute_dtype), cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention serving state (whisper decode): LA state over encoder
+# ---------------------------------------------------------------------------
+
+class CrossState(NamedTuple):
+    s: jnp.ndarray  # (B, Hkv, D, D+1) — precomputed sum_j k_j (x) [v_j, 1]
+    p: jnp.ndarray  # (B, Hkv, D+1)
+
+
+def cross_precompute(p, cfg, ctx, compute_dtype=None) -> CrossState:
+    """Precompute the LA cross-attention state from encoder output once."""
+    hd = cfg.resolved_head_dim
+    k = _split_heads(dense(p["wk"], ctx, compute_dtype), cfg.num_kv_heads, hd)
+    v = _split_heads(dense(p["wv"], ctx, compute_dtype), cfg.num_kv_heads, hd)
+    if cfg.la.normalize_qk:
+        k = l2_normalize(k)
+    vaug = jnp.concatenate(
+        [v.astype(F32), jnp.ones(v.shape[:-1] + (1,), F32)], -1)
+    s = jnp.einsum("bhjd,bhje->bhde", k.astype(F32), vaug,
+                   preferred_element_type=F32)
+    return CrossState(s=s, p=vaug.sum(axis=-2))
+
+
+def cross_decode(p, cfg, x, state: CrossState, compute_dtype=None):
+    """One-token cross-attention readout against the precomputed state."""
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    q = _split_heads(dense(p["wq"], x, compute_dtype), cfg.num_heads, hd)
+    if cfg.la.normalize_qk:
+        q = l2_normalize(q)
+    hkv = state.s.shape[1]
+    g = cfg.num_heads // hkv
+    qg = q[:, :, 0].reshape(b, hkv, g, hd).astype(F32)
+    la = cfg.la
+    f = (la.a * state.p[:, :, None, :]
+         + la.b * jnp.einsum("bhgd,bhde->bhge", qg, state.s,
+                             preferred_element_type=F32))
+    o = f[..., :hd] / f[..., hd:]
+    o = o.reshape(b, cfg.num_heads, 1, hd).astype(x.dtype)
+    return dense(p["wo"], _merge_heads(o), compute_dtype)

@@ -1,0 +1,41 @@
+"""Modality frontends — STUBS per assignment.
+
+The [audio]/[vlm] architectures specify the transformer BACKBONE only;
+`input_specs()` feeds precomputed frame/patch embeddings, so these stubs
+exist to document the interface and to let the examples synthesize
+plausible inputs.  A real deployment would replace them with the conv
+mel-spectrogram frontend (whisper) / ViT patchifier (qwen2-vl).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frames_stub(key, batch: int, num_frames: int, d_model: int,
+                      dtype=jnp.float32):
+    """Stand-in for whisper's conv1d(mel) encoder input: (B, T, d_model)."""
+    return jax.random.normal(key, (batch, num_frames, d_model), dtype) * 0.02
+
+
+def vision_positions_stub(batch: int, seq_len: int, grid=(1, 16, 16)):
+    """M-RoPE (t, h, w) positions for a text+image stream: (3, B, N).
+
+    The first grid[0]*grid[1]*grid[2] tokens are image patches laid out on
+    the (t, h, w) grid; the rest are text with all three streams equal
+    (qwen2-vl's convention).
+    """
+    t, h, w = grid
+    n_img = t * h * w
+    n_img = min(n_img, seq_len)
+    idx = jnp.arange(n_img)
+    tpos = idx // (h * w)
+    hpos = (idx // w) % h
+    wpos = idx % w
+    text = jnp.arange(seq_len - n_img) + (tpos.max() + 1 if n_img else 0)
+    pos3 = jnp.stack([
+        jnp.concatenate([tpos, text]),
+        jnp.concatenate([hpos, text]),
+        jnp.concatenate([wpos, text]),
+    ]).astype(jnp.int32)
+    return jnp.broadcast_to(pos3[:, None], (3, batch, seq_len))

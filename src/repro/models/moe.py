@@ -1,0 +1,265 @@
+"""Mixture-of-Experts FFN with capacity-bounded scatter dispatch (EP).
+
+Design for the 512-chip dry-run: the dispatch never materializes a
+(tokens, experts, capacity) one-hot.  Instead each token replica's slot
+is computed with an exclusive cumsum over the token axis, token states
+are scattered into a dense (E, capacity, d) buffer (dropping overflow),
+experts run as one batched einsum — sharded experts-over-"model"
+(expert parallelism), capacity-over-"data" — and outputs are gathered
+back and combined with the router weights.  FLOPs stay
+O(tokens * top_k * d * d_ff * capacity_factor): linear in tokens.
+
+Shared experts (DeepSeek-V2 / Moonlight) run densely on every token.
+An auxiliary load-balancing loss (Switch-style) is returned to the
+caller and added to the training objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import BATCH, MODEL, constrain
+from repro.models.common import dense_init
+
+F32 = jnp.float32
+
+
+def _expert_ffn_init(key, d_model: int, d_ff: int, num: int, dtype=F32):
+    """num stacked SwiGLU experts: wi/wg (E, d, f), wo (E, f, d)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = (1.0 / d_model) ** 0.5
+    s_out = (1.0 / d_ff) ** 0.5
+    mk = lambda k, shape, s: (jax.random.normal(k, shape, F32) * s).astype(dtype)  # noqa: E731
+    return {
+        "wi": mk(k1, (num, d_model, d_ff), s_in),
+        "wg": mk(k2, (num, d_model, d_ff), s_in),
+        "wo": mk(k3, (num, d_ff, d_model), s_out),
+    }
+
+
+def moe_init(key, cfg, dtype=F32):
+    m = cfg.moe
+    ks = jax.random.split(key, 3)
+    p = {
+        "router": dense_init(ks[0], cfg.d_model, m.num_experts, dtype=F32),
+        "experts": _expert_ffn_init(ks[1], cfg.d_model, m.d_expert,
+                                    m.num_experts, dtype),
+    }
+    if m.num_shared:
+        p["shared"] = _expert_ffn_init(ks[2], cfg.d_model, m.d_expert,
+                                       m.num_shared, dtype)
+    return p
+
+
+def _batched_swiglu(p, x):
+    """x: (E, C, d) -> (E, C, d) through per-expert SwiGLU."""
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, p["wg"].astype(x.dtype)))
+         * jnp.einsum("ecd,edf->ecf", x, p["wi"].astype(x.dtype)))
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+
+
+def moe_apply(p, cfg, x, compute_dtype=None, dropless: bool = False):
+    """x: (B, N, d).  Returns (y, aux_loss).
+
+    dropless=True sizes capacity to the worst case (tokens * top_k) so no
+    token is ever dropped — used on the decode path where tokens is tiny
+    and routing fidelity matters; training uses the capacity factor.
+
+    When a mesh policy with a "model" axis is installed (production /
+    dry-run), dispatch runs expert-parallel via moe_apply_ep.
+    """
+    from repro.distributed.act_sharding import current_mesh
+    mesh = current_mesh()
+    if mesh is not None and mesh.shape.get("model", 1) > 1 \
+            and cfg.moe.num_experts % mesh.shape["model"] == 0:
+        return moe_apply_ep(p, cfg, x, mesh, compute_dtype, dropless)
+    m = cfg.moe
+    b, n, d = x.shape
+    tokens = b * n
+    xt = x.reshape(tokens, d)
+    if compute_dtype is not None:
+        xt = xt.astype(compute_dtype)
+
+    logits = jnp.einsum("td,de->te", xt.astype(F32),
+                        p["router"]["w"].astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)      # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                # renormalize
+
+    # Switch-style load-balancing aux loss
+    density = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], m.num_experts, dtype=F32), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux_loss = m.num_experts * jnp.sum(density * density_proxy)
+
+    if dropless:
+        capacity = tokens * m.top_k
+    else:
+        capacity = int(tokens * m.top_k * m.capacity_factor
+                       / m.num_experts) + 1
+
+    # slot of each (token, k) replica within its expert: exclusive cumsum
+    onehot = jax.nn.one_hot(expert_ids, m.num_experts,
+                            dtype=jnp.int32)                   # (T, K, E)
+    flat = onehot.reshape(tokens * m.top_k, m.num_experts)
+    slots_e = jnp.cumsum(flat, axis=0) - flat                  # (T*K, E)
+    slot = jnp.sum(slots_e * flat, axis=-1)                    # (T*K,)
+    eid = expert_ids.reshape(-1)
+    keep = slot < capacity
+    # dropped replicas scatter to a dump row (capacity slot of expert 0)
+    target = jnp.where(keep, eid * capacity + slot,
+                       m.num_experts * capacity)
+
+    buf = jnp.zeros((m.num_experts * capacity + 1, d), xt.dtype)
+    xr = jnp.repeat(xt, m.top_k, axis=0)                       # (T*K, d)
+    buf = buf.at[target].set(xr, mode="drop")
+    expert_in = buf[:-1].reshape(m.num_experts, capacity, d)
+    expert_in = constrain(expert_in, MODEL, None, None)
+
+    expert_out = _batched_swiglu(p["experts"], expert_in)
+    expert_out = constrain(expert_out, MODEL, None, None)
+    out_flat = jnp.concatenate(
+        [expert_out.reshape(-1, d), jnp.zeros((1, d), expert_out.dtype)])
+    gathered = out_flat[target]                                # (T*K, d)
+    gates = jnp.where(keep, gate_vals.reshape(-1), 0.0)
+    y = jnp.sum(gathered.reshape(tokens, m.top_k, d)
+                * gates.reshape(tokens, m.top_k, 1).astype(gathered.dtype),
+                axis=1)
+
+    if "shared" in p:
+        y = y + _shared_experts(p["shared"], xt)
+    return y.reshape(b, n, d), aux_loss
+
+
+def _shared_experts(p_shared, xt):
+    """Shared experts as plain per-token MLPs.
+
+    (A broadcast to (S, tokens, d) + batched einsum replicates the whole
+    token stream S times and, sharded, cost a 12 GB/layer all-reduce on
+    the dry-run — plain matmuls keep the token dim batch-sharded.)
+    """
+    y = 0.0
+    for s in range(p_shared["wi"].shape[0]):
+        h = (jax.nn.silu(xt @ p_shared["wg"][s].astype(xt.dtype))
+             * (xt @ p_shared["wi"][s].astype(xt.dtype)))
+        y = y + h @ p_shared["wo"][s].astype(xt.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel dispatch (shard_map) — the production path
+# ---------------------------------------------------------------------------
+#
+# pjit's lowering of the capacity scatter merges per-shard buffers with a
+# full-buffer all-reduce (observed: 4 GB/layer/device on the 64-expert
+# dry-run — the dominant collective cost of the MoE cells).  Expert
+# parallelism does it shard-locally instead:
+#
+#   * tokens stay sharded over ("pod","data"); every model-rank carries
+#     the same token shard, so routing + the capacity scatter are
+#     REPLICATED local work — no collective at all;
+#   * each model-rank slices its E/model_size experts from the local
+#     buffer and runs its expert FFNs (weights are model-sharded);
+#   * the combine is a partial sum over each rank's own experts followed
+#     by ONE psum over "model": (T_local, d) — the minimal payload.
+#
+# Capacity is per-DP-shard (standard for EP dispatch); the aux loss is
+# averaged over the data axes.
+
+def moe_apply_ep(p, cfg, x, mesh, compute_dtype=None,
+                 dropless: bool = False):
+    from jax.sharding import PartitionSpec as P
+    m = cfg.moe
+    b, n, d = x.shape
+    cdt = compute_dtype or x.dtype
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape
+                       and b % mesh.shape[a] == 0)
+    # require the batch to divide across the axes jointly
+    dp = 1
+    use_axes = []
+    for a in batch_axes:
+        if b % (dp * mesh.shape[a]) == 0:
+            use_axes.append(a)
+            dp *= mesh.shape[a]
+    bspec = tuple(use_axes) if len(use_axes) > 1 else \
+        (use_axes[0] if use_axes else None)
+    ep = mesh.shape["model"]
+    e_loc = m.num_experts // ep
+
+    def local(xt, router_w, wi, wg, wo, shared):
+        # xt: (T_local, d); wi/wg/wo: (E_loc, ...); shared: replicated
+        tokens = xt.shape[0]
+        logits = jnp.einsum("td,de->te", xt.astype(F32),
+                            router_w.astype(F32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        density = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], m.num_experts,
+                                          dtype=F32), axis=0)
+        proxy = jnp.mean(probs, axis=0)
+        # pmean the per-expert means FIRST so the product matches the
+        # global-batch aux loss exactly
+        for a in use_axes:
+            density = jax.lax.pmean(density, a)
+            proxy = jax.lax.pmean(proxy, a)
+        aux = m.num_experts * jnp.sum(density * proxy)
+
+        if dropless:
+            cap = tokens * m.top_k
+        else:
+            cap = int(tokens * m.top_k * m.capacity_factor
+                      / m.num_experts) + 1
+        onehot = jax.nn.one_hot(expert_ids, m.num_experts, dtype=jnp.int32)
+        flat = onehot.reshape(tokens * m.top_k, m.num_experts)
+        slots_e = jnp.cumsum(flat, axis=0) - flat
+        slot = jnp.sum(slots_e * flat, axis=-1)
+        eid = expert_ids.reshape(-1)
+        keep = slot < cap
+        target = jnp.where(keep, eid * cap + slot, m.num_experts * cap)
+
+        buf = jnp.zeros((m.num_experts * cap + 1, d), xt.dtype)
+        xr = jnp.repeat(xt, m.top_k, axis=0)
+        buf = buf.at[target].set(xr, mode="drop")
+
+        # my slice of experts
+        rank = jax.lax.axis_index("model")
+        mybuf = jax.lax.dynamic_slice(
+            buf[:-1].reshape(m.num_experts, cap, d),
+            (rank * e_loc, 0, 0), (e_loc, cap, d))
+        h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", mybuf,
+                                    wg.astype(mybuf.dtype)))
+             * jnp.einsum("ecd,edf->ecf", mybuf, wi.astype(mybuf.dtype)))
+        out = jnp.einsum("ecf,efd->ecd", h, wo.astype(mybuf.dtype))
+
+        # partial combine over MY experts only, then one psum
+        local_t = target - rank * (e_loc * cap)
+        in_range = keep & (local_t >= 0) & (local_t < e_loc * cap)
+        safe_t = jnp.where(in_range, local_t, e_loc * cap)
+        out_flat = jnp.concatenate(
+            [out.reshape(-1, d), jnp.zeros((1, d), out.dtype)])
+        gathered = out_flat[safe_t]
+        gates = jnp.where(in_range, gate_vals.reshape(-1), 0.0)
+        y = jnp.sum(gathered.reshape(tokens, m.top_k, d)
+                    * gates.reshape(tokens, m.top_k, 1).astype(gathered.dtype),
+                    axis=1)
+        # psum in the compute dtype: halves the one cross-model payload
+        y = jax.lax.psum(y.astype(xt.dtype), "model")
+        if shared is not None:
+            y = y + _shared_experts(shared, xt)
+        return y, aux
+
+    xt = x.reshape(b * n, d).astype(cdt)
+    shared = p.get("shared")
+    y, aux = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, None), P(), P("model", None, None),
+                  P("model", None, None), P("model", None, None),
+                  None if shared is None else P()),
+        out_specs=(P(bspec, None), P()),
+        check_vma=False,
+    )(xt, p["router"]["w"], p["experts"]["wi"], p["experts"]["wg"],
+      p["experts"]["wo"], shared)
+    return y.reshape(b, n, d), aux

@@ -1,0 +1,59 @@
+"""Rotary position embeddings: standard, partial (pythia/stablelm/chatglm),
+and M-RoPE (qwen2-vl).
+
+All functions take q/k of shape (B, H, N, D) and positions; M-RoPE takes
+positions (3, B, N) — temporal/height/width streams (equal for text).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _rope_angles(positions, dim: int, theta: float):
+    """positions (..., N) -> cos/sin (..., N, dim/2)."""
+    inv = 1.0 / theta ** (jnp.arange(0, dim, 2, dtype=F32) / dim)
+    ang = positions.astype(F32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x, cos, sin):
+    """Rotate-half (GPT-NeoX style) on the last dim. x: (..., N, dim)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def apply_rope(x, positions, kind: str = "standard", fraction: float = 1.0,
+               theta: float = 10000.0, mrope_sections=(16, 24, 24)):
+    """x: (B, H, N, D); positions: (B, N) or (3, B, N) for mrope."""
+    if kind in ("none", "sinusoid"):
+        return x
+    d = x.shape[-1]
+    dtype = x.dtype
+    xf = x.astype(F32)
+
+    if kind == "mrope":
+        assert positions.ndim == 3, "mrope needs (3, B, N) positions"
+        # sections partition the dim/2 frequency slots across t/h/w streams
+        cos_l, sin_l = [], []
+        start = 0
+        full_cos, full_sin = [], []
+        for s, pos in zip(mrope_sections, positions):
+            cos, sin = _rope_angles(pos, d, theta)  # (B, N, d/2)
+            full_cos.append(cos[..., start:start + s])
+            full_sin.append(sin[..., start:start + s])
+            start += s
+        cos = jnp.concatenate(full_cos, -1)[:, None]  # (B,1,N,d/2)
+        sin = jnp.concatenate(full_sin, -1)[:, None]
+        return _rotate(xf, cos, sin).astype(dtype)
+
+    rot_dim = d if kind == "standard" else int(d * fraction)
+    rot_dim -= rot_dim % 2
+    cos, sin = _rope_angles(positions, rot_dim, theta)  # (B, N, rot/2)
+    cos, sin = cos[:, None], sin[:, None]               # broadcast heads
+    x_rot = _rotate(xf[..., :rot_dim], cos, sin)
+    if rot_dim < d:
+        x_rot = jnp.concatenate([x_rot, xf[..., rot_dim:]], -1)
+    return x_rot.astype(dtype)

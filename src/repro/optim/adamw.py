@@ -1,0 +1,72 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Functional, pytree-based; moments are stored in f32 regardless of param
+dtype.  Under pjit the moments inherit the param's PartitionSpec
+(ZeRO-style sharding — see distributed/zero.py for the explicit rules).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: object       # pytree like params, f32
+    nu: object       # pytree like params, f32
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, F32)  # noqa: E731
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale), grads), norm
+
+
+def apply(params, grads, state: AdamWState, *, lr, beta1=0.9, beta2=0.95,
+          eps=1e-8, weight_decay=0.1, grad_clip=0.0):
+    """Returns (new_params, new_state, metrics)."""
+    if grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(F32), grads)
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    b1c = 1 - beta1 ** step.astype(F32)
+    b2c = 1 - beta2 ** step.astype(F32)
+
+    def upd(p, g, mu, nu):
+        mu = beta1 * mu + (1 - beta1) * g
+        nu = beta2 * nu + (1 - beta2) * g * g
+        mu_hat = mu / b1c
+        nu_hat = nu / b2c
+        delta = mu_hat / (jnp.sqrt(nu_hat) + eps)
+        # decoupled weight decay: only >=2D weights (skip norms/biases)
+        if p.ndim >= 2 and weight_decay:
+            delta = delta + weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), {"grad_norm": gnorm}

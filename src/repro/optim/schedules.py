@@ -1,0 +1,21 @@
+"""LR schedules — cosine warmup/decay per the paper's §5.2 recipe
+(min 5e-5, max 1e-3, cosine warmup and decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup_decay(step, *, max_lr: float, min_lr: float,
+                        warmup_steps: int, total_steps: int):
+    """Linear warmup to max_lr, cosine decay to min_lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.maximum(warmup_steps, 1)
+    warm_lr = max_lr * step / warm
+    t = jnp.clip((step - warmup_steps)
+                 / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos_lr = min_lr + 0.5 * (max_lr - min_lr) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm_lr, cos_lr)
+
+
+def constant(step, *, lr: float):
+    return jnp.full((), lr, jnp.float32)

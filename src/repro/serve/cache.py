@@ -1,0 +1,36 @@
+"""Serving-cache accounting: the paper's memory story, quantified.
+
+For a context of length S the softmax backend needs a KV cache of
+O(S * Hkv * hd) per layer, while the paper's linear backend keeps a
+recurrent state of O(Hkv * Dk * (Dv+1)) — independent of S.  These
+functions compute exact byte counts for benchmarks/run.py (Table 1) and
+the serving engine's admission control.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as mdl
+
+
+def cache_bytes(cfg, batch: int, max_len: int) -> int:
+    """Exact decode-cache bytes for (cfg, batch, context)."""
+    shapes = jax.eval_shape(lambda: mdl.init_cache(cfg, batch, max_len))
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(shapes))
+
+
+def kv_cache_bytes_analytic(cfg, batch: int, seq: int,
+                            dtype_bytes: int = 2) -> int:
+    """Softmax-backend KV cache: B * Hkv * S * hd * 2 (k and v) per layer."""
+    hd = cfg.resolved_head_dim
+    return (2 * batch * cfg.num_kv_heads * seq * hd * dtype_bytes
+            * cfg.num_layers)
+
+
+def la_state_bytes_analytic(cfg, batch: int, dtype_bytes: int = 4) -> int:
+    """Paper's LA state: B * Hkv * Dk * (Dv+1) + B * Hkv * (Dv+1), f32."""
+    hd = cfg.resolved_head_dim
+    per_layer = batch * cfg.num_kv_heads * ((hd + 1) * hd + (hd + 1))
+    return per_layer * dtype_bytes * cfg.num_layers

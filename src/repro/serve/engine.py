@@ -1,0 +1,142 @@
+"""Batched serving engine with continuous batching.
+
+Fixed-slot engine: up to `max_slots` concurrent sequences share one
+jitted decode step; finished slots are immediately refilled from the
+queue (continuous batching).  With the paper's linear backend every
+slot's cache is the O(D^2) recurrent state, so slot memory does not
+grow with generated length — admission control is trivial compared to
+paged KV caches.
+
+Per-slot state isolation: all caches are batched on their batch dim; a
+new request's prefilled cache is scattered into its slot index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as mdl
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list            # token ids
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    generated: Optional[list] = None
+
+
+class Engine:
+    def __init__(self, cfg, params, *, max_slots: int = 4,
+                 max_len: int = 4096, eos_id: int = 2, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * max_slots
+        self.cache = mdl.init_cache(cfg, max_slots, max_len)
+        self.next_tokens = np.zeros((max_slots,), np.int32)
+        self.remaining = np.zeros((max_slots,), np.int64)
+        self.key = jax.random.PRNGKey(seed)
+
+        self._decode = jax.jit(
+            lambda p, c, t: mdl.decode_step(p, cfg, c, t))
+        # prefill uses batch 1 and is scattered into the slot
+        self._prefill = jax.jit(
+            lambda p, b, c: mdl.prefill(p, cfg, b, c))
+
+    # -- public API ----------------------------------------------------
+    def submit(self, req: Request):
+        req.generated = []
+        self.queue.append(req)
+
+    def run(self) -> dict[int, list]:
+        """Run until queue + slots drain.  Returns rid -> generated ids."""
+        done: dict[int, list] = {}
+        while self._admit() or any(s is not None for s in self.slots):
+            self._step(done)
+        return done
+
+    # -- internals -------------------------------------------------------
+    def _admit(self) -> bool:
+        admitted = False
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.popleft()
+                self._prefill_into(i, req)
+                self.slots[i] = req
+                admitted = True
+        return admitted
+
+    def _prefill_into(self, slot: int, req: Request):
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        batch = {"tokens": toks}
+        if self.cfg.rope_kind == "mrope":
+            n = toks.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (1, n))
+            batch["positions"] = jnp.broadcast_to(pos[None], (3, 1, n))
+        cache1 = mdl.init_cache(self.cfg, 1, self.max_len)
+        logits, cache1 = self._prefill(self.params, batch, cache1)
+        tok = self._sample(logits, req.temperature)
+        # scatter slot-1 cache into the batched cache at index `slot`
+        def put(big, small):
+            if small.ndim == 0:
+                return small  # pos counter: shared scalar (see note below)
+            bdim = _batch_dim(big, small)
+            if bdim is None:
+                return big
+            idx = [slice(None)] * big.ndim
+            idx[bdim] = slot
+            return big.at[tuple(idx)].set(jnp.take(small, 0, axis=bdim))
+        self.cache = jax.tree.map(put, self.cache, cache1)
+        self.next_tokens[slot] = int(tok[0])
+        # the prefill already produced the first new token
+        self.remaining[slot] = req.max_new_tokens - 1
+        req.generated.append(int(tok[0]))
+
+    def _sample(self, logits, temperature):
+        if temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature, axis=-1)
+
+    def _step(self, done: dict):
+        # finalize slots already exhausted (or EOS'd) at prefill time
+        for i, req in enumerate(self.slots):
+            if req is not None and (self.remaining[i] <= 0
+                                    or self.next_tokens[i] == self.eos_id):
+                done[req.rid] = req.generated
+                self.slots[i] = None
+        if all(s is None for s in self.slots):
+            return
+        toks = jnp.asarray(self.next_tokens)
+        logits, self.cache = self._decode(self.params, self.cache, toks)
+        nxt = np.array(self._sample(logits, 0.0))  # writable copy
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.generated.append(tok)
+            self.remaining[i] -= 1
+            if tok == self.eos_id or self.remaining[i] <= 0:
+                done[req.rid] = req.generated
+                self.slots[i] = None
+        self.next_tokens = nxt
+
+
+def _batch_dim(big, small):
+    """First dim where big.shape[d] != small.shape[d] (the batch dim)."""
+    for d in range(small.ndim):
+        if big.shape[d] != small.shape[d]:
+            return d
+    return None

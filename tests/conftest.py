@@ -1,0 +1,15 @@
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _cpu_f32():
+    # tests run in f32 on the single CPU device; the 512-device dry-run
+    # is exercised via a subprocess (test_dryrun.py)
+    jax.config.update("jax_enable_x64", False)
+    yield
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

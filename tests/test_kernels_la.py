@@ -1,0 +1,212 @@
+"""Linear-attention kernel correctness: xla chunked scan + Pallas
+(interpret mode) against the pure-jnp quadratic oracle, across
+shape/dtype sweeps; analytic backward against autodiff of the oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chunked
+from repro.core.numerics import l2_normalize
+from repro.kernels import linear_attention as pk
+from repro.kernels import ops, ref
+
+SHAPES = [
+    # (B, H, Hkv, N, D, chunk)
+    (1, 1, 1, 8, 4, 4),
+    (2, 4, 4, 64, 16, 16),
+    (2, 4, 2, 100, 32, 32),      # GQA + ragged N
+    (1, 8, 1, 96, 64, 128),      # MQA, chunk > N
+    (3, 6, 3, 33, 8, 16),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _make(b, h, hkv, n, d, dtype, key=0, normalize=True):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    q = jax.random.normal(ks[0], (b, h, n, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, n, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, n, d), jnp.float32)
+    if normalize:  # paper Eq. 22 keeps the denominator positive
+        q, k = l2_normalize(q), l2_normalize(k)
+    return q.astype(dtype), k.astype(dtype), v.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fwd_chunked_vs_ref(shape, dtype):
+    b, h, hkv, n, d, c = shape
+    q, k, v = _make(b, h, hkv, n, d, dtype)
+    o_ref = ref.la_ref(q, k, v, 1.0, 1.0, causal=True)
+    o, g, _ = chunked.la_fwd_chunked(q, k, v, 1.0, 1.0, chunk=c)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(dtype))
+    assert bool(jnp.all(g[:, :, 1:] > 0)), "normalizer must stay positive"
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fwd_pallas_vs_ref(shape, dtype):
+    b, h, hkv, n, d, c = shape
+    q, k, v = _make(b, h, hkv, n, d, dtype)
+    o_ref = ref.la_ref(q, k, v, 1.0, 1.0, causal=True)
+    o, _ = pk.la_fwd_pallas(q, k, v, 1.0, 1.0, chunk=c, interpret=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("ab", [(1.0, 1.0), (0.5, 2.0), (2.0, 0.25)])
+def test_general_kernel_coeffs(ab):
+    """f(x) = a + b x for learnable (a, b), paper §2.2."""
+    a, b_ = ab
+    q, k, v = _make(2, 4, 2, 40, 16, jnp.float32)
+    o_ref = ref.la_ref(q, k, v, a, b_, causal=True)
+    o, _, _ = chunked.la_fwd_chunked(q, k, v, a, b_, chunk=16)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=2e-5,
+                               atol=2e-5)
+    o_pl, _ = pk.la_fwd_pallas(q, k, v, a, b_, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_backward_vs_autodiff_oracle(shape):
+    """Paper Eqs. 19-21: the analytic gradient must equal autodiff of the
+    quadratic reference."""
+    b, h, hkv, n, d, c = shape
+    q, k, v = _make(b, h, hkv, n, d, jnp.float32)
+
+    def loss_custom(q, k, v):
+        return jnp.sum(jnp.sin(ops.la_causal(q, k, v, 1.0, 1.0, c, "xla")))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.sin(ref.la_ref(q, k, v, 1.0, 1.0, causal=True)))
+
+    g1 = jax.grad(loss_custom, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a_, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_backward_pallas_vs_chunked(shape):
+    b, h, hkv, n, d, c = shape
+    q, k, v = _make(b, h, hkv, n, d, jnp.float32)
+    o, g = pk.la_fwd_pallas(q, k, v, 1.0, 1.0, c, interpret=True)
+    om = jax.random.normal(jax.random.PRNGKey(7), o.shape)
+    dq1, dk1, dv1 = pk.la_bwd_pallas(q, k, v, o, g, om, 1.0, 1.0, c,
+                                     interpret=True)
+    dq2, dk2, dv2 = chunked.la_bwd_chunked(q, k, v, o, g, om, 1.0, 1.0, c)
+    for a_, b_ in ((dq1, dq2), (dk1, dk2), (dv1, dv2)):
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_residual_memory_is_linear():
+    """The custom vjp must store only {q,k,v,o,g} — O(N D), not O(N D^2)
+    (the paper's §3.2 memory contract)."""
+    b, h, n, d = 1, 2, 64, 16
+    q, k, v = _make(b, h, h, n, d, jnp.float32)
+    _, vjp = jax.vjp(lambda *a: ops.la_causal(*a, 1.0, 1.0, 16, "xla"),
+                     q, k, v)
+    leaves = jax.tree.leaves(vjp)
+    res_elems = sum(x.size for x in leaves if hasattr(x, "size"))
+    # q,k,v,o: 4*(B*H*N*D); g: B*H*N  (plus small constants)
+    budget = 4 * b * h * n * d + b * h * n
+    assert res_elems <= budget * 1.5, (res_elems, budget)
+
+
+def test_noncausal_vs_ref():
+    q, k, v = _make(2, 4, 2, 48, 16, jnp.float32)
+    o_ref = ref.la_ref(q, k, v, 1.0, 1.0, causal=False)
+    o = chunked.la_noncausal(q, k, v, 1.0, 1.0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_prefill_decode_chain_matches_full():
+    b, h, hkv, n, d = 2, 4, 2, 40, 16
+    q, k, v = _make(b, h, hkv, n, d, jnp.float32)
+    o_full, _, _ = chunked.la_fwd_chunked(q, k, v, 1.0, 1.0, chunk=16)
+    o_pre, st = ops.la_prefill(q[:, :, :30], k[:, :, :30], v[:, :, :30],
+                               1.0, 1.0, 16)
+    np.testing.assert_allclose(np.asarray(o_pre),
+                               np.asarray(o_full[:, :, :30]),
+                               rtol=1e-5, atol=1e-5)
+    for i in range(30, n):
+        st, o_i = chunked.la_decode_step(st, q[:, :, i], k[:, :, i],
+                                         v[:, :, i], 1.0, 1.0)
+        np.testing.assert_allclose(np.asarray(o_i),
+                                   np.asarray(o_full[:, :, i]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_state_size_independent_of_context():
+    """Paper's deployment claim: decode state is O(D^2), not O(N)."""
+    st = chunked.init_state(2, 4, 64)
+    assert st.s.shape == (2, 4, 64, 65)
+    assert st.p.shape == (2, 4, 65)
+
+
+def test_chunk_size_invariance():
+    q, k, v = _make(2, 4, 2, 96, 16, jnp.float32)
+    outs = [chunked.la_fwd_chunked(q, k, v, 1.0, 1.0, chunk=c)[0]
+            for c in (8, 16, 32, 96)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_learnable_coefficients_gradients():
+    """Paper §2.2: f(x) = a + b x with LEARNABLE (a, b) — the analytic
+    da/db must match autodiff of the oracle, and a·da + b·db == 0 (the
+    output depends only on a/b)."""
+    q, k, v = _make(2, 4, 2, 50, 16, jnp.float32)
+    a, b_ = jnp.float32(0.8), jnp.float32(1.3)
+
+    def loss_c(q, k, v, a, b_):
+        return jnp.sum(jnp.sin(
+            ops.la_causal_learnable(q, k, v, a, b_, 16, "xla")))
+
+    def loss_r(q, k, v, a, b_):
+        return jnp.sum(jnp.sin(ref.la_ref(q, k, v, a, b_, causal=True)))
+
+    g1 = jax.grad(loss_c, argnums=(0, 1, 2, 3, 4))(q, k, v, a, b_)
+    g2 = jax.grad(loss_r, argnums=(0, 1, 2, 3, 4))(q, k, v, a, b_)
+    for x, y in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=5e-4, atol=5e-4)
+    assert abs(float(a * g1[3] + b_ * g1[4])) < 1e-5
+
+
+def test_learnable_coefficients_train_step(rng):
+    """A model configured with learnable (a, b) trains and moves them."""
+    import dataclasses
+    from repro.configs.base import LACfg, TrainConfig
+    from repro.configs.registry import get_config
+    from repro.models import model as mdl
+    from repro.optim import adamw
+    from repro.train.step import build_train_step
+
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, la=dataclasses.replace(cfg.la, learnable_coeffs=True))
+    params = mdl.init_params(cfg, rng)
+    assert "la_a" in params["blocks"]["mixer"], "learnable coeffs missing"
+    tc = TrainConfig(warmup_steps=0, total_steps=10, learning_rate=1e-2,
+                     checkpoint_every=0)
+    step = jax.jit(build_train_step(cfg, tc))
+    opt = adamw.init(params)
+    batch = {"tokens": jax.random.randint(rng, (2, 24), 0, cfg.vocab_size)}
+    a0 = float(params["blocks"]["mixer"]["la_a"][0])
+    for i in range(3):
+        params, opt, m = step(params, opt, batch, i + 1)
+        assert np.isfinite(float(m["loss"]))
+    a1 = float(params["blocks"]["mixer"]["la_a"][0])
+    assert a0 != a1, "learnable coefficient did not move"

@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED config of each
+assigned family runs one forward + one train step on CPU with correct
+output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ARCHS, get_config
+from repro.models import model as mdl
+from repro.models.frontends import vision_positions_stub
+from repro.optim import adamw
+from repro.train.step import build_train_step
+
+B, N = 2, 24
+
+
+def _batch(cfg, key, n=N):
+    batch = {"tokens": jax.random.randint(key, (B, n), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model)) * 0.02
+    if cfg.rope_kind == "mrope":
+        batch["positions"] = vision_positions_stub(B, n, grid=(1, 3, 3))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    params = mdl.init_params(cfg, rng)
+    batch = _batch(cfg, rng)
+    hidden, aux = mdl.forward_hidden(params, cfg, batch)
+    assert hidden.shape == (B, N, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(hidden))), f"{arch}: NaN in hidden"
+    logits = mdl.forward_logits(params, cfg, batch)
+    assert logits.shape == (B, N, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: NaN in logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    tc = TrainConfig(warmup_steps=1, total_steps=10, checkpoint_every=0)
+    params = mdl.init_params(cfg, rng)
+    opt = adamw.init(params)
+    step = jax.jit(build_train_step(cfg, tc))
+    batch = _batch(cfg, rng)
+    # step_idx=1: the cosine schedule's LR at step 0 is 0 (warmup ramp)
+    params2, opt2, metrics = step(params, opt, batch, 1)
+    assert np.isfinite(float(metrics["loss"])), f"{arch}: NaN loss"
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0, f"{arch}: zero gradient"
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, x: a + float(jnp.abs(x).sum()),
+        jax.tree.map(lambda a, b: a.astype(jnp.float32)
+                     - b.astype(jnp.float32), params, params2), 0.0)
+    assert delta > 0, f"{arch}: params unchanged"
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-2.7b",
+                                  "moonshot-v1-16b-a3b", "zamba2-7b"])
+def test_loss_decreases_on_repeated_batch(arch, rng):
+    """Overfit a single batch for a few steps — loss must go down."""
+    cfg = get_config(arch, smoke=True)
+    tc = TrainConfig(learning_rate=3e-3, min_learning_rate=3e-3,
+                     warmup_steps=0, total_steps=100, grad_clip=1.0)
+    params = mdl.init_params(cfg, rng)
+    opt = adamw.init(params)
+    step = jax.jit(build_train_step(cfg, tc))
+    batch = _batch(cfg, rng)
+    losses = []
+    for i in range(8):
+        params, opt, metrics = step(params, opt, batch, i)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.95, f"{arch}: no learning {losses}"
+
+
+def test_param_count_sane():
+    """Full configs must land near their nameplate sizes."""
+    # bounds follow the ASSIGNED dims (which for granite/moonshot imply
+    # more params than the marketing name: e.g. granite at 52L x swiglu
+    # d_ff=24576 is ~28B; the 20B gpt_bigcode original uses a non-gated
+    # FFN — we implement the assignment's numbers)
+    expected = {
+        "qwen2.5-3b": (2.5e9, 4.0e9),
+        "granite-20b": (17e9, 30e9),
+        "deepseek-v2-236b": (200e9, 260e9),
+        "moonshot-v1-16b-a3b": (13e9, 30e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "zamba2-7b": (5.5e9, 9e9),
+        "qwen2-vl-7b": (6e9, 9e9),
+        "stablelm-1.6b": (1.3e9, 2.1e9),
+        "chatglm3-6b": (5e9, 7.5e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("deepseek-v2-236b")
+    assert cfg.active_param_count() < 0.2 * cfg.param_count()
+
+
+def test_backend_switch_softmax(rng):
+    """Every attention arch also runs with the softmax baseline backend."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("qwen2.5-3b", smoke=True),
+                              attention_backend="softmax")
+    params = mdl.init_params(cfg, rng)
+    logits = mdl.forward_logits(params, cfg, _batch(cfg, rng))
+    assert bool(jnp.all(jnp.isfinite(logits)))

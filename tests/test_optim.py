@@ -1,0 +1,64 @@
+"""AdamW + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, schedules
+
+
+def test_adamw_first_step_is_lr_signed():
+    """With fresh moments, AdamW's first update is lr * sign-ish(g)."""
+    p = {"w": jnp.zeros((4, 4))}
+    g = {"w": jnp.full((4, 4), 2.0)}
+    st = adamw.init(p)
+    p2, st2, m = adamw.apply(p, g, st, lr=0.1, weight_decay=0.0,
+                             grad_clip=0.0)
+    np.testing.assert_allclose(np.asarray(p2["w"]), -0.1, rtol=1e-4)
+    assert int(st2.step) == 1
+
+
+def test_weight_decay_only_on_matrices():
+    p = {"w": jnp.ones((4, 4)), "scale": jnp.ones((4,))}
+    g = {"w": jnp.zeros((4, 4)), "scale": jnp.zeros((4,))}
+    st = adamw.init(p)
+    p2, _, _ = adamw.apply(p, g, st, lr=0.1, weight_decay=0.1,
+                           grad_clip=0.0)
+    assert float(p2["w"][0, 0]) < 1.0       # decayed
+    assert float(p2["scale"][0]) == 1.0     # not decayed
+
+
+def test_grad_clip():
+    p = {"w": jnp.zeros((3,))}
+    g = {"w": jnp.full((3,), 100.0)}
+    st = adamw.init(p)
+    _, _, m = adamw.apply(p, g, st, lr=0.1, grad_clip=1.0)
+    assert float(m["grad_norm"]) > 1.0  # reports the raw norm
+
+
+def test_moments_in_f32_for_bf16_params():
+    p = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = adamw.init(p)
+    assert st.mu["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    p2, st2, _ = adamw.apply(p, g, st, lr=0.1)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert st2.nu["w"].dtype == jnp.float32
+
+
+def test_cosine_schedule_endpoints():
+    """Paper §5.2: warmup to max 1e-3, cosine decay to min 5e-5."""
+    kw = dict(max_lr=1e-3, min_lr=5e-5, warmup_steps=100, total_steps=1000)
+    assert float(schedules.cosine_warmup_decay(0, **kw)) == 0.0
+    np.testing.assert_allclose(
+        float(schedules.cosine_warmup_decay(100, **kw)), 1e-3, rtol=1e-3)
+    np.testing.assert_allclose(
+        float(schedules.cosine_warmup_decay(1000, **kw)), 5e-5, rtol=1e-3)
+    mid = float(schedules.cosine_warmup_decay(550, **kw))
+    assert 5e-5 < mid < 1e-3
+
+
+def test_schedule_monotone_after_warmup():
+    kw = dict(max_lr=1e-3, min_lr=5e-5, warmup_steps=10, total_steps=100)
+    lrs = [float(schedules.cosine_warmup_decay(s, **kw))
+           for s in range(10, 101, 5)]
+    assert all(a >= b for a, b in zip(lrs, lrs[1:]))

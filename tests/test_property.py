@@ -1,0 +1,149 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+Invariants of normalized linear attention (paper Eqs. 4-9, 22):
+  1. constant-value invariance — rows of the attention matrix sum to 1,
+     so v_n = c for all n implies o_i = c exactly;
+  2. causality — perturbing tokens > t never changes outputs <= t;
+  3. scale invariance — with Eq. 22 normalization, rescaling any q_i or
+     k_i row leaves the output unchanged;
+  4. batch/head permutation equivariance;
+  5. chunked == quadratic oracle for arbitrary shapes;
+  6. decode chain == prefill for arbitrary split points.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chunked
+from repro.core.linear_attention import LAConfig, la_attention
+from repro.core.numerics import l2_normalize
+from repro.kernels import ops, ref
+
+_settings = settings(max_examples=20, deadline=None)
+
+dims = st.tuples(
+    st.integers(1, 3),                    # B
+    st.sampled_from([1, 2, 4]),           # Hkv
+    st.integers(1, 4),                    # group multiplier
+    st.integers(1, 70),                   # N
+    st.sampled_from([4, 8, 16, 32]),      # D
+    st.sampled_from([8, 16, 128]),        # chunk
+)
+
+
+def _qkv(b, hkv, g, n, d, seed):
+    h = hkv * g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = l2_normalize(jax.random.normal(ks[0], (b, h, n, d)))
+    k = l2_normalize(jax.random.normal(ks[1], (b, hkv, n, d)))
+    v = jax.random.normal(ks[2], (b, hkv, n, d))
+    return q, k, v
+
+
+@_settings
+@given(dims, st.integers(0, 2**31 - 1))
+def test_matches_oracle(dims_, seed):
+    b, hkv, g, n, d, c = dims_
+    q, k, v = _qkv(b, hkv, g, n, d, seed)
+    o, _, _ = chunked.la_fwd_chunked(q, k, v, 1.0, 1.0, chunk=c)
+    o_ref = ref.la_ref(q, k, v, 1.0, 1.0, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=5e-4, atol=5e-4)
+
+
+@_settings
+@given(dims, st.integers(0, 2**31 - 1),
+       st.floats(-3, 3, allow_nan=False))
+def test_constant_value_invariance(dims_, seed, const):
+    b, hkv, g, n, d, c = dims_
+    q, k, _ = _qkv(b, hkv, g, n, d, seed)
+    v = jnp.full((b, hkv, n, d), const, jnp.float32)
+    o, _, _ = chunked.la_fwd_chunked(q, k, v, 1.0, 1.0, chunk=c)
+    np.testing.assert_allclose(np.asarray(o), const, rtol=1e-4, atol=1e-4)
+
+
+@_settings
+@given(dims, st.integers(0, 2**31 - 1), st.data())
+def test_causality(dims_, seed, data):
+    b, hkv, g, n, d, c = dims_
+    q, k, v = _qkv(b, hkv, g, n, d, seed)
+    t = data.draw(st.integers(0, n - 1))
+    o1, _, _ = chunked.la_fwd_chunked(q, k, v, 1.0, 1.0, chunk=c)
+    # perturb all tokens strictly after t
+    noise = jax.random.normal(jax.random.PRNGKey(seed ^ 0xabc),
+                              (b, hkv, n - 1 - t, d))
+    k2 = k.at[:, :, t + 1:].add(noise)
+    v2 = v.at[:, :, t + 1:].add(noise * 2)
+    o2, _, _ = chunked.la_fwd_chunked(q, k2, v2, 1.0, 1.0, chunk=c)
+    np.testing.assert_allclose(np.asarray(o1[:, :, :t + 1]),
+                               np.asarray(o2[:, :, :t + 1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+@_settings
+@given(dims, st.integers(0, 2**31 - 1),
+       st.floats(0.1, 10, allow_nan=False))
+def test_qk_scale_invariance(dims_, seed, scale):
+    """Eq. 22 row normalization cancels any per-row rescaling."""
+    b, hkv, g, n, d, c = dims_
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    h = hkv * g
+    q = jax.random.normal(ks[0], (b, h, n, d))
+    k = jax.random.normal(ks[1], (b, hkv, n, d))
+    v = jax.random.normal(ks[2], (b, hkv, n, d))
+    cfg = LAConfig(chunk=c, backend="xla")
+    o1 = la_attention(q, k, v, cfg)
+    o2 = la_attention(q * scale, k * scale, v, cfg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-3, atol=1e-3)
+
+
+@_settings
+@given(dims, st.integers(0, 2**31 - 1))
+def test_head_permutation_equivariance(dims_, seed):
+    b, hkv, g, n, d, c = dims_
+    q, k, v = _qkv(b, hkv, g, n, d, seed)
+    perm = np.asarray(
+        jax.random.permutation(jax.random.PRNGKey(seed ^ 0x5), hkv))
+    o, _, _ = chunked.la_fwd_chunked(q, k, v, 1.0, 1.0, chunk=c)
+    # permute KV heads and the matching query groups
+    qg = q.reshape(b, hkv, g, n, d)[:, perm].reshape(b, hkv * g, n, d)
+    o2, _, _ = chunked.la_fwd_chunked(qg, k[:, perm], v[:, perm], 1.0, 1.0,
+                                      chunk=c)
+    og = o.reshape(b, hkv, g, n, d)[:, perm].reshape(b, hkv * g, n, d)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(og),
+                               rtol=1e-5, atol=1e-5)
+
+
+@_settings
+@given(dims, st.integers(0, 2**31 - 1), st.data())
+def test_decode_equals_prefill_any_split(dims_, seed, data):
+    b, hkv, g, n, d, c = dims_
+    q, k, v = _qkv(b, hkv, g, n, d, seed)
+    split = data.draw(st.integers(1, n))
+    o_full, _, _ = chunked.la_fwd_chunked(q, k, v, 1.0, 1.0, chunk=c)
+    _, stt = ops.la_prefill(q[:, :, :split], k[:, :, :split],
+                            v[:, :, :split], 1.0, 1.0, c)
+    for i in range(split, min(split + 3, n)):
+        stt, o_i = chunked.la_decode_step(stt, q[:, :, i], k[:, :, i],
+                                          v[:, :, i], 1.0, 1.0)
+        np.testing.assert_allclose(np.asarray(o_i),
+                                   np.asarray(o_full[:, :, i]),
+                                   rtol=5e-5, atol=5e-5)
+
+
+@_settings
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 50),
+       st.sampled_from([4, 8, 16]), st.integers(0, 2**31 - 1))
+def test_gradient_matches_oracle(b, h, n, d, seed):
+    q, k, v = _qkv(b, h, 1, n, d, seed)
+    def f_c(q, k, v):
+        return jnp.sum(jnp.cos(ops.la_causal(q, k, v, 1.0, 1.0, 16, "xla")))
+    def f_r(q, k, v):
+        return jnp.sum(jnp.cos(ref.la_ref(q, k, v, 1.0, 1.0, causal=True)))
+    g1 = jax.grad(f_c, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a_, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a_), np.asarray(b_),
+                                   rtol=1e-3, atol=1e-3)
