@@ -54,14 +54,14 @@ def bench_table1():
     time + peak residual memory of one fwd pass, causal."""
     from repro.core.ssd import ssd_fwd_chunked
     from repro.kernels import ops, ref
-    from repro.models.attention import softmax_chunked
     b, h, n, d = 2, 4, 4096, 64
     q, k, v = _qkv(b, h, n, d)
     ld = jnp.full((b, h, n), -0.01)  # GLA stand-in: decay-gated chunked LA
 
     la = jax.jit(lambda q, k, v: ops.la_causal(q, k, v, 1.0, 1.0, 128,
                                                "xla"))
-    sm = jax.jit(lambda q, k, v: softmax_chunked(q, k, v))
+    sm = jax.jit(lambda q, k, v: ops.softmax_attention(q, k, v,
+                                                       backend="xla"))
     quad = jax.jit(lambda q, k, v: ref.la_ref(q, k, v))
     gla = jax.jit(lambda q, k, v: ssd_fwd_chunked(q, k, v, ld, 128)[0])
 

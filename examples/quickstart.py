@@ -8,7 +8,7 @@ and O(D^2)-per-token decode — and checks them against each other.
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear_attention import LAConfig, la_attention, \
+from repro.core.linear_attention import LACfg, la_attention, \
     la_attention_decode, la_attention_prefill
 
 B, H, HKV, N, D = 2, 8, 2, 256, 64   # GQA: 8 query heads, 2 KV heads
@@ -19,7 +19,7 @@ q = jax.random.normal(kq, (B, H, N, D))
 k = jax.random.normal(kk, (B, HKV, N, D))
 v = jax.random.normal(kv, (B, HKV, N, D))
 
-cfg = LAConfig(a=1.0, b=1.0, normalize_qk=True, chunk=128)
+cfg = LACfg(a=1.0, b=1.0, normalize_qk=True, chunk=128)
 
 # 1. training path: causal, custom analytic backward (paper Eqs. 19-21)
 o = la_attention(q, k, v, cfg)

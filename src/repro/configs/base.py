@@ -7,7 +7,13 @@ from typing import Optional, Tuple
 
 @dataclasses.dataclass(frozen=True)
 class LACfg:
-    """Paper's linear-attention kernel f(x) = a + b x (§2.2, §3.3)."""
+    """Paper's linear-attention kernel f(x) = a + b x (§2.2, §3.3).
+
+    The SINGLE kernel-hyperparameter schema: every mixer backend reads
+    its chunk size and kernel-impl name from here (there is no second,
+    kernel-local config class), and `mixers.get_backend` validates the
+    impl name against the KernelImpl registry at resolution time.
+    """
 
     a: float = 1.0
     b: float = 1.0

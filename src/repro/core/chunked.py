@@ -25,7 +25,6 @@ shared across the query group, so no KV repetition is materialized.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -84,7 +83,7 @@ def _chunks(x: jnp.ndarray, c: int, axis: int) -> jnp.ndarray:
 # Forward (causal)
 # ---------------------------------------------------------------------------
 
-def la_fwd_chunked(q, k, v, a: float, b: float, chunk: int = 128,
+def la_fwd_chunked(q, k, v, a: float, b: float, chunk: int = 512,
                    state: LAState | None = None):
     """Causal normalized linear attention, chunked scan.
 
@@ -147,7 +146,7 @@ def la_fwd_chunked(q, k, v, a: float, b: float, chunk: int = 128,
 # ---------------------------------------------------------------------------
 
 def la_bwd_chunked(q, k, v, o, g, omega, a: float, b: float,
-                   chunk: int = 128):
+                   chunk: int = 512):
     """Analytic gradient from residuals {q,k,v,o,g} and upstream grad omega.
 
     Returns (dq, dk, dv) in the respective input dtypes.

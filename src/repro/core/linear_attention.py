@@ -1,34 +1,24 @@
 """Module-level API for the paper's linear attention.
 
-This is the composable entry point models use: it applies the paper's
-q/k l2 normalization (Eq. 22), dispatches causal / non-causal paths, and
-exposes prefill/decode for serving.  The heavy lifting lives in
-`core.chunked` (XLA path) and `kernels.linear_attention` (Pallas path),
-tied together by the custom-vjp wrapper in `kernels.ops`.
+This is the composable entry point the `linear` mixer backend uses: it
+applies the paper's q/k l2 normalization (Eq. 22), dispatches causal /
+non-causal paths, and exposes prefill/decode for serving.  The heavy
+lifting lives in `core.chunked` (XLA path) and `kernels.linear_attention`
+(Pallas path), tied together by the KernelImpl registry and custom-vjp
+wrapper in `kernels.ops`.
+
+Hyperparameters come as `configs.base.LACfg` — the single schema of
+record (there is deliberately no second, kernel-local config class).
 """
 from __future__ import annotations
 
-import dataclasses
-
-import jax.numpy as jnp
-
+from repro.configs.base import LACfg
 from repro.core.chunked import LAState, init_state
 from repro.core.numerics import l2_normalize
 from repro.kernels import ops as _ops
 
 
-@dataclasses.dataclass(frozen=True)
-class LAConfig:
-    """Linear-attention hyperparameters (paper §3-4)."""
-
-    a: float = 1.0           # constant kernel coefficient; f(x) = a + b x
-    b: float = 1.0
-    normalize_qk: bool = True  # paper Eq. 22
-    chunk: int = 128           # TPU chunk size (MXU-aligned)
-    backend: str = "auto"      # auto | xla | pallas | pallas_interpret | ref
-
-
-def la_attention(q, k, v, cfg: LAConfig = LAConfig(), *, causal: bool = True):
+def la_attention(q, k, v, cfg: LACfg = LACfg(), *, causal: bool = True):
     """q: (B, H, N, D); k, v: (B, Hkv, N, D).  Returns (B, H, N, D)."""
     if cfg.normalize_qk:
         q, k = l2_normalize(q), l2_normalize(k)
@@ -37,7 +27,18 @@ def la_attention(q, k, v, cfg: LAConfig = LAConfig(), *, causal: bool = True):
     return _ops.la_noncausal(q, k, v, cfg.a, cfg.b)
 
 
-def la_attention_prefill(q, k, v, cfg: LAConfig = LAConfig(),
+def la_attention_learnable(q, k, v, a, b, cfg: LACfg = LACfg()):
+    """Causal LA with learnable scalar coefficients (paper §2.2).
+
+    a, b: scalar jnp arrays (per-layer parameters); gradients flow to
+    q, k, v, a and b through the analytic backward in kernels.ops.
+    """
+    if cfg.normalize_qk:
+        q, k = l2_normalize(q), l2_normalize(k)
+    return _ops.la_causal_learnable(q, k, v, a, b, cfg.chunk, cfg.backend)
+
+
+def la_attention_prefill(q, k, v, cfg: LACfg = LACfg(),
                          state: LAState | None = None):
     """Serving prefill: returns (o, LAState) for subsequent decode."""
     if cfg.normalize_qk:
@@ -45,7 +46,7 @@ def la_attention_prefill(q, k, v, cfg: LAConfig = LAConfig(),
     return _ops.la_prefill(q, k, v, cfg.a, cfg.b, cfg.chunk, state=state)
 
 
-def la_attention_decode(state: LAState, q, k, v, cfg: LAConfig = LAConfig()):
+def la_attention_decode(state: LAState, q, k, v, cfg: LACfg = LACfg()):
     """Serving decode: one token.  q: (B, H, D); k, v: (B, Hkv, D).
 
     O(D^2) per token — context length only enters through the state.
@@ -56,6 +57,7 @@ def la_attention_decode(state: LAState, q, k, v, cfg: LAConfig = LAConfig()):
 
 
 __all__ = [
-    "LAConfig", "LAState", "init_state",
-    "la_attention", "la_attention_prefill", "la_attention_decode",
+    "LACfg", "LAState", "init_state",
+    "la_attention", "la_attention_learnable",
+    "la_attention_prefill", "la_attention_decode",
 ]

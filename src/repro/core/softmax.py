@@ -1,0 +1,59 @@
+"""Chunked online-softmax attention — XLA path of the softmax baseline.
+
+This is the Regular-Attention baseline the paper compares against: the
+lax.scan analogue of FlashAttention-2, O(N) memory on any backend.  The
+Pallas TPU twin lives in `kernels.flash_attention`; both are registered
+as `KernelImpl` entries of the "softmax" family in `kernels.ops`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def softmax_chunked(q, k, v, *, causal: bool = True, chunk: int = 512):
+    """q: (B,H,Nq,D); k,v: (B,Hkv,Nk,D).  Online-softmax over KV chunks."""
+    b, h, nq, d = q.shape
+    dv = v.shape[-1]
+    hkv, nk = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / d ** 0.5
+    c = min(chunk, nk)
+    t = -(-nk // c)
+    nk_pad = t * c
+    padw = [(0, 0), (0, 0), (0, nk_pad - nk), (0, 0)]
+    kp, vp = jnp.pad(k, padw), jnp.pad(v, padw)
+    k_c = jnp.moveaxis(kp.reshape(b, hkv, t, c, d), 2, 0)
+    v_c = jnp.moveaxis(vp.reshape(b, hkv, t, c, dv), 2, 0)
+    qg = q.reshape(b, hkv, g, nq, d).astype(F32)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (nq, c), 0)
+    offs = nk - nq  # causal offset: query i is global position i + offs
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, ti = inp
+        s = scale * jnp.einsum("bhgid,bhjd->bhgij", qg, kc.astype(F32),
+                               preferred_element_type=F32)
+        jk = ti * c + jax.lax.broadcasted_iota(jnp.int32, (nq, c), 1)
+        mask = jk < nk  # padded keys never attend
+        if causal:
+            mask = mask & (iq + offs >= jk)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m_new)
+        pmat = jnp.exp(s - m_new[..., None])
+        l = corr * l + pmat.sum(-1)
+        acc = corr[..., None] * acc + jnp.einsum(
+            "bhgij,bhjd->bhgid", pmat, vc.astype(F32),
+            preferred_element_type=F32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, nq), -1e30, F32)
+    l0 = jnp.zeros((b, hkv, g, nq), F32)
+    a0 = jnp.zeros((b, hkv, g, nq, dv), F32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (k_c, v_c, jnp.arange(t)))
+    o = acc / l[..., None]
+    return o.reshape(b, h, nq, dv).astype(q.dtype)

@@ -23,7 +23,6 @@ non-divisible dims fall back to the next candidate axis or replicate.
 from __future__ import annotations
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

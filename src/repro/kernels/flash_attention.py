@@ -15,6 +15,10 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 F32 = jnp.float32
 NEG_INF = -1e30
 
@@ -89,7 +93,7 @@ def flash_attention_pallas(q, k, v, scale: float | None = None,
             pltpu.VMEM((cq, 1), F32),
             pltpu.VMEM((cq, 1), F32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

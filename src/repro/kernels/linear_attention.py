@@ -33,6 +33,10 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 from repro.core.numerics import safe_div
 
 F32 = jnp.float32
@@ -122,7 +126,7 @@ def la_fwd_pallas(q, k, v, a: float, b: float, chunk: int = 128,
             pltpu.VMEM((dk, dv + 1), F32),
             pltpu.VMEM((1, dv + 1), F32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
@@ -231,7 +235,7 @@ def la_bwd_pallas(q, k, v, o, g, omega, a: float, b: float,
                                lambda bi, hi, ti: (bi, hi, ti, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, h, n_pad, dk), q.dtype),
         scratch_shapes=[pltpu.VMEM((dk, dv + 1), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(k, v, om_hat, h_vec)
@@ -263,7 +267,7 @@ def la_bwd_pallas(q, k, v, o, g, omega, a: float, b: float,
             jax.ShapeDtypeStruct((bsz, hkv, n_pad, dv), v.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((dk + 1, dv + 1), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, om_hat, h_vec)

@@ -1,74 +1,203 @@
-"""Public jit'd entry points for the paper's linear attention.
+"""Public jit'd entry points for the paper's kernels + the KernelImpl registry.
 
-Backend dispatch:
-  "xla"              chunked lax.scan (core.chunked) — CPU / dry-run / any backend
-  "pallas"           Pallas TPU kernels (kernels.linear_attention)
-  "pallas_interpret" Pallas kernels in interpret mode (CPU validation)
+Kernel selection is data-driven: each (family, impl) pair is a registered
+`KernelImpl`.  Families are the attention score shapes ("linear" — the
+paper's kernelized attention — and "softmax", the Regular-Attention
+baseline); impls are execution backends:
+
+  "xla"              chunked lax.scan (core.chunked / core.softmax)
+  "pallas"           Pallas TPU kernels (kernels.linear_attention / .flash_attention)
+  "pallas_interpret" the same Pallas kernels in interpret mode (CPU validation)
   "ref"              quadratic oracle (tests only)
-  "auto"             "pallas" on TPU, else "xla"
+  "auto"             resolves to "pallas" on TPU, else "xla"
 
-The causal path is wrapped in jax.custom_vjp implementing the paper's
-analytic backward (Eqs. 19-21): residuals are {q, k, v, o, g} — O(N D)
-memory — instead of the O(N D^2) intermediates autodiff would store.
+Adding an impl is one `register_kernel(...)` call; `get_kernel` raises an
+actionable error listing the registered impls for unknown names.
+
+The causal linear path is wrapped in jax.custom_vjp implementing the
+paper's analytic backward (Eqs. 19-21): residuals are {q, k, v, o, g} —
+O(N D) memory — instead of the O(N D^2) intermediates autodiff would
+store.  The custom-vjp wiring lives here, once, regardless of impl.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import chunked as _chunked
+from repro.core import softmax as _softmax
 from repro.core.chunked import LAState, init_state, la_decode_step, la_noncausal
 from repro.kernels import ref as _ref
 
 __all__ = [
-    "la_causal", "la_prefill", "la_noncausal", "la_decode_step",
-    "LAState", "init_state", "default_backend",
+    "KernelImpl", "register_kernel", "get_kernel", "kernel_names",
+    "la_causal", "la_causal_learnable", "la_prefill", "la_noncausal",
+    "la_decode_step", "softmax_attention",
+    "LAState", "init_state", "default_backend", "DEFAULT_CHUNK",
 ]
+
+# one chunk default everywhere (configs.base.LACfg is the schema of record):
+# 512 tokens/chunk costs +3% intra-chunk flops vs 128 but 4x fewer scan
+# iterations -> -20% HBM traffic on train cells (EXPERIMENTS §Perf)
+DEFAULT_CHUNK = 512
 
 
 def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
-def _resolve(backend: str) -> str:
-    return default_backend() if backend == "auto" else backend
+# ---------------------------------------------------------------------------
+# KernelImpl registry
+# ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    """One execution backend of one attention family.
+
+    fwd: linear family: (q, k, v, a, b, chunk) -> (o, g)
+         softmax family: (q, k, v, causal, chunk) -> o
+    bwd: linear family only: (q, k, v, o, g, omega, a, b, chunk) ->
+         (dq, dk, dv); None means "fall back to the xla backward"
+         (the oracle has no analytic backward, softmax uses autodiff).
+    """
+
+    family: str
+    name: str
+    fwd: Callable
+    bwd: Optional[Callable] = None
+
+
+_KERNELS: dict[tuple[str, str], KernelImpl] = {}
+
+
+def register_kernel(family: str, name: str, *, fwd, bwd=None) -> KernelImpl:
+    impl = KernelImpl(family=family, name=name, fwd=fwd, bwd=bwd)
+    _KERNELS[(family, name)] = impl
+    return impl
+
+
+def kernel_names(family: str) -> list[str]:
+    return sorted(n for (f, n) in _KERNELS if f == family)
+
+
+def get_kernel(family: str, name: str) -> KernelImpl:
+    resolved = default_backend() if name == "auto" else name
+    impl = _KERNELS.get((family, resolved))
+    if impl is None:
+        raise ValueError(
+            f"unknown kernel impl {name!r} for the {family!r} family; "
+            f"registered: {kernel_names(family)} (plus 'auto')")
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# Linear family impls
+# ---------------------------------------------------------------------------
+
+def _linear_xla_fwd(q, k, v, a, b, chunk):
+    o, g, _ = _chunked.la_fwd_chunked(q, k, v, a, b, chunk)
+    return o, g
+
+
+def _linear_pallas_fwd(interpret):
+    def fwd(q, k, v, a, b, chunk):
+        from repro.kernels import linear_attention as _pl
+        return _pl.la_fwd_pallas(q, k, v, a, b, chunk, interpret=interpret)
+    return fwd
+
+
+def _linear_pallas_bwd(interpret):
+    def bwd(q, k, v, o, g, omega, a, b, chunk):
+        from repro.kernels import linear_attention as _pl
+        return _pl.la_bwd_pallas(q, k, v, o, g, omega, a, b, chunk,
+                                 interpret=interpret)
+    return bwd
+
+
+def _linear_ref_fwd(q, k, v, a, b, chunk):
+    o = _ref.la_ref(q, k, v, a, b, causal=True)
+    # oracle recomputes g for residuals
+    kk = _ref.expand_kv(k, q.shape[1]).astype(jnp.float32)
+    s = jnp.einsum("bhid,bhjd->bhij", q.astype(jnp.float32), kk)
+    w = a + b * s
+    n = q.shape[2]
+    w = jnp.where(jnp.tril(jnp.ones((n, n), bool)), w, 0.0)
+    return o, w.sum(-1)
+
+
+register_kernel("linear", "xla", fwd=_linear_xla_fwd,
+                bwd=_chunked.la_bwd_chunked)
+register_kernel("linear", "pallas", fwd=_linear_pallas_fwd(False),
+                bwd=_linear_pallas_bwd(False))
+register_kernel("linear", "pallas_interpret", fwd=_linear_pallas_fwd(True),
+                bwd=_linear_pallas_bwd(True))
+register_kernel("linear", "ref", fwd=_linear_ref_fwd)  # bwd: xla fallback
+
+
+# ---------------------------------------------------------------------------
+# Softmax family impls
+# ---------------------------------------------------------------------------
+
+def _softmax_xla_fwd(q, k, v, causal, chunk):
+    return _softmax.softmax_chunked(q, k, v, causal=causal, chunk=chunk)
+
+
+def _softmax_pallas_fwd(interpret):
+    def fwd(q, k, v, causal, chunk):
+        from repro.kernels import flash_attention as _fl
+        if not causal:  # the flash kernel is causal-only; stream chunks
+            return _softmax.softmax_chunked(q, k, v, causal=False,
+                                            chunk=chunk)
+        # the flash kernel doesn't understand GQA yet: this materializes
+        # the H/Hkv-fold KV copy in HBM (ROADMAP: index the KV BlockSpec
+        # by head//group instead)
+        k = _ref.expand_kv(k, q.shape[1])
+        v = _ref.expand_kv(v, q.shape[1])
+        return _fl.flash_attention_pallas(q, k, v, interpret=interpret)
+    return fwd
+
+
+def _softmax_ref_fwd(q, k, v, causal, chunk):
+    return _ref.softmax_ref(q, k, v, causal=causal)
+
+
+register_kernel("softmax", "xla", fwd=_softmax_xla_fwd)
+register_kernel("softmax", "pallas", fwd=_softmax_pallas_fwd(False))
+register_kernel("softmax", "pallas_interpret", fwd=_softmax_pallas_fwd(True))
+register_kernel("softmax", "ref", fwd=_softmax_ref_fwd)
+
+
+def softmax_attention(q, k, v, *, causal: bool = True,
+                      chunk: int = DEFAULT_CHUNK, backend: str = "auto"):
+    """Softmax-baseline attention through the registry.
+
+    q: (B, H, N, D); k, v: (B, Hkv, N, D), Hkv | H.  Autodiff-safe (the
+    chunked scan recomputes per-chunk probabilities in the backward).
+    """
+    return get_kernel("softmax", backend).fwd(q, k, v, causal, chunk)
+
+
+# ---------------------------------------------------------------------------
+# Linear family entry points (custom vjp lives here, once)
+# ---------------------------------------------------------------------------
 
 def _fwd_dispatch(q, k, v, a, b, chunk, backend):
-    backend = _resolve(backend)
-    if backend == "xla":
-        o, g, _ = _chunked.la_fwd_chunked(q, k, v, a, b, chunk)
-        return o, g
-    if backend in ("pallas", "pallas_interpret"):
-        from repro.kernels import linear_attention as _pl
-        return _pl.la_fwd_pallas(q, k, v, a, b, chunk,
-                                 interpret=backend == "pallas_interpret")
-    if backend == "ref":
-        o = _ref.la_ref(q, k, v, a, b, causal=True)
-        # oracle recomputes g for residuals
-        kk = _ref._expand_kv(k, q.shape[1]).astype(jnp.float32)
-        s = jnp.einsum("bhid,bhjd->bhij", q.astype(jnp.float32), kk)
-        w = a + b * s
-        n = q.shape[2]
-        w = jnp.where(jnp.tril(jnp.ones((n, n), bool)), w, 0.0)
-        return o, w.sum(-1)
-    raise ValueError(f"unknown backend {backend!r}")
+    return get_kernel("linear", backend).fwd(q, k, v, a, b, chunk)
 
 
 def _bwd_dispatch(q, k, v, o, g, omega, a, b, chunk, backend):
-    backend = _resolve(backend)
-    if backend in ("pallas", "pallas_interpret"):
-        from repro.kernels import linear_attention as _pl
-        return _pl.la_bwd_pallas(q, k, v, o, g, omega, a, b, chunk,
-                                 interpret=backend == "pallas_interpret")
-    return _chunked.la_bwd_chunked(q, k, v, o, g, omega, a, b, chunk)
+    impl = get_kernel("linear", backend)
+    bwd = impl.bwd or _chunked.la_bwd_chunked
+    return bwd(q, k, v, o, g, omega, a, b, chunk)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def la_causal(q, k, v, a: float = 1.0, b: float = 1.0,
-              chunk: int = 128, backend: str = "auto"):
+              chunk: int = DEFAULT_CHUNK, backend: str = "auto"):
     """Causal normalized linear attention (paper Eqs. 4-9).
 
     q: (B, H, N, D); k, v: (B, Hkv, N, D), Hkv | H.  Returns (B, H, N, D).
@@ -91,8 +220,8 @@ def _la_causal_bwd(a, b, chunk, backend, res, omega):
 la_causal.defvjp(_la_causal_fwd, _la_causal_bwd)
 
 
-def la_prefill(q, k, v, a: float = 1.0, b: float = 1.0, chunk: int = 128,
-               state: LAState | None = None):
+def la_prefill(q, k, v, a: float = 1.0, b: float = 1.0,
+               chunk: int = DEFAULT_CHUNK, state: LAState | None = None):
     """Causal LA that also returns the recurrent state for decode.
 
     Inference-only (no custom grad needed).  Returns (o, LAState).
@@ -116,7 +245,7 @@ def la_prefill(q, k, v, a: float = 1.0, b: float = 1.0, chunk: int = 128,
 # ---------------------------------------------------------------------------
 
 @partial(jax.custom_vjp, nondiff_argnums=(5, 6))
-def la_causal_learnable(q, k, v, a, b, chunk: int = 512,
+def la_causal_learnable(q, k, v, a, b, chunk: int = DEFAULT_CHUNK,
                         backend: str = "auto"):
     """Causal normalized LA with DIFFERENTIABLE scalar coefficients.
 
@@ -136,7 +265,7 @@ def _la_learn_bwd(chunk, backend, res, omega):
     q, k, v, o, g, a, b = res
     dq, dk, dv = _bwd_dispatch(q, k, v, o, g, omega, a, b, chunk, backend)
     f32 = jnp.float32
-    kk = _ref._expand_kv(v, q.shape[1]) if v.shape[1] != q.shape[1] else v
+    kk = _ref.expand_kv(v, q.shape[1]) if v.shape[1] != q.shape[1] else v
     f1 = jnp.cumsum(kk.astype(f32), axis=2)              # (B, H, N, D)
     n = q.shape[2]
     g1 = jnp.arange(1, n + 1, dtype=f32)[None, None, :, None]

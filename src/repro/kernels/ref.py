@@ -8,14 +8,21 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def _expand_kv(x: jnp.ndarray, num_q_heads: int) -> jnp.ndarray:
-    """Repeat KV heads (B, Hkv, N, D) -> (B, H, N, D) for grouped queries."""
+def expand_kv(x: jnp.ndarray, num_q_heads: int) -> jnp.ndarray:
+    """Repeat KV heads (B, Hkv, N, D) -> (B, H, N, D) for grouped queries.
+
+    Materializes the H/Hkv-fold copy — fine for the oracles here, and
+    used (with a noted cost) by kernels that don't understand GQA yet.
+    """
     b, hkv, n, d = x.shape
     if hkv == num_q_heads:
         return x
     assert num_q_heads % hkv == 0, (num_q_heads, hkv)
     g = num_q_heads // hkv
     return jnp.repeat(x, g, axis=1)
+
+
+_expand_kv = expand_kv  # backwards-compatible private alias
 
 
 def la_ref(

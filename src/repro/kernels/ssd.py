@@ -14,13 +14,16 @@ shared Mamba-2 B/C projections are never repeated in HBM.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
 
 F32 = jnp.float32
 
@@ -98,7 +101,7 @@ def ssd_fwd_pallas(q, k, v, log_decay, chunk: int = 128,
                                lambda bi, hi, ti: (bi, hi, ti, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, h, n_pad, dv), v.dtype),
         scratch_shapes=[pltpu.VMEM((dk, dv), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, log_decay)
@@ -223,7 +226,7 @@ def ssd_bwd_pallas(q, k, v, log_decay, o, omega, chunk: int = 128,
                                lambda bi, hi, ti: (bi, hi, ti, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, h, n_pad, dk), F32),
         scratch_shapes=[pltpu.VMEM((dk, dv_d), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(kp, vp, omp, ldp)
@@ -255,7 +258,7 @@ def ssd_bwd_pallas(q, k, v, log_decay, o, omega, chunk: int = 128,
             jax.ShapeDtypeStruct((bsz, h, n_pad, dv_d), v.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((dk, dv_d), F32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qp, kp, vp, omp, ldp)

@@ -39,6 +39,7 @@ from repro.distributed.sharding import batch_shardings, cache_shardings, \
     param_shardings
 from repro.distributed.zero import opt_state_shardings
 from repro.launch.mesh import make_production_mesh
+from repro.mixers import get_backend
 from repro.models import model as mdl
 from repro.optim import adamw
 from repro.train.step import build_prefill_step, build_serve_step, \
@@ -72,6 +73,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                smoke: bool = False, cfg=None, donate: bool = True):
     """Lower+compile one cell.  Returns (compiled, meta dict)."""
     cfg = cfg or get_config(arch, smoke=smoke)
+    get_backend(cfg)  # registry-resolution validation before any compile
     shape = get_shape(shape_name)
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size

@@ -19,6 +19,7 @@ import jax
 from repro.configs.base import TrainConfig
 from repro.configs.registry import get_config
 from repro.data.pipeline import SyntheticLM
+from repro.mixers import get_backend
 from repro.models import model as mdl
 from repro.train.loop import Trainer
 
@@ -41,6 +42,7 @@ def main():
     cfg = get_config(args.arch, smoke=not args.full)
     if args.backend:
         cfg = dataclasses.replace(cfg, attention_backend=args.backend)
+    get_backend(cfg)  # fail fast on a bad --backend, naming the valid ones
     tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                      warmup_steps=max(args.steps // 10, 1),
                      checkpoint_every=max(args.steps // 2, 1),

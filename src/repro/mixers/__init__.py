@@ -1,0 +1,21 @@
+"""Token-mixer backends behind one `AttentionBackend` interface.
+
+Public API:
+  get_backend(cfg_or_name) / get_mixer  — resolve + validate a backend
+  register_backend(name)                — class decorator for new backends
+  registered_backends()                 — names, for error messages / docs
+  cache                                 — the per-backend cache namespace
+
+Importing this package registers the four built-in backends:
+linear (the paper), softmax (baseline), mla, mamba2.  See
+docs/attention_backends.md for how to add one.
+"""
+from repro.mixers.base import AttentionBackend, get_backend, get_mixer, \
+    register_backend, registered_backends, resolve_backend_name
+from repro.mixers import cache  # noqa: F401  (re-exported namespace)
+from repro.mixers import linear, mamba2, mla, softmax  # noqa: F401  (register)
+
+__all__ = [
+    "AttentionBackend", "get_backend", "get_mixer", "register_backend",
+    "registered_backends", "resolve_backend_name", "cache",
+]

@@ -1,0 +1,145 @@
+"""AttentionBackend protocol + registry — the single mixer dispatch point.
+
+The paper's pitch is that its linear attention is a drop-in replacement
+for softmax with identical end-to-end expressivity.  "Drop-in" only pays
+off if swapping mechanisms is a config change, so every token mixer
+(linear, softmax, MLA, Mamba-2, and whatever comes next) implements ONE
+interface and registers itself by name; models, serving, launchers and
+benchmarks dispatch through `get_backend(cfg)` and never branch on
+backend strings inline.
+
+Backend resolution from a ModelConfig:
+  cfg.mixer == "attention"  -> cfg.attention_backend  ("linear"|"softmax")
+  otherwise                 -> cfg.mixer              ("mla"|"mamba2")
+
+Resolution also validates cfg.la (the single kernel-hyperparameter
+schema, configs.base.LACfg): the kernel impl name must be registered in
+kernels.ops and the chunk size positive — errors name the valid options.
+
+Adding a backend is one file: subclass AttentionBackend, decorate with
+@register_backend("name"), import the module from mixers/__init__.py.
+"""
+from __future__ import annotations
+
+from repro.kernels import ops as _ops
+
+_BACKENDS: dict[str, "AttentionBackend"] = {}
+
+
+class AttentionBackend:
+    """One token-mixing mechanism across train / prefill / decode.
+
+    Implementations are stateless singletons: params and caches are
+    explicit pytrees, so jit/scan/shard_map see plain functions.
+
+    Shapes (C = d_model): x: (B, N, C); positions: (B, N) int32 absolute
+    positions (mrope: (3, B, N)); decode takes x: (B, 1, C) and
+    position: (B, 1) — PER-SLOT positions, slots of a continuously
+    batched engine sit at different depths.
+    """
+
+    name: str = "?"
+    # mamba2-style blocks fuse channel mixing into the mixer: the block
+    # adds no separate FFN / second norm around it
+    fuses_ffn: bool = False
+    # capability flags, checked at registry-resolution time so a config
+    # that needs them fails fast instead of deep inside a jitted step
+    supports_noncausal: bool = False   # apply_noncausal (encoder / cross)
+    supports_cross_decode: bool = False  # cross_precompute / cross_decode
+
+    # -- required ------------------------------------------------------
+    def init(self, key, cfg, dtype):
+        """-> params pytree for one layer's mixer."""
+        raise NotImplementedError
+
+    def apply(self, p, cfg, x, positions, compute_dtype=None):
+        """Causal self-attention over the full sequence (training)."""
+        raise NotImplementedError
+
+    def init_cache(self, cfg, batch: int, max_len: int, dtype):
+        """-> per-layer decode cache (shape may be O(1) or O(max_len))."""
+        raise NotImplementedError
+
+    def prefill(self, p, cfg, x, positions, cache, compute_dtype=None):
+        """Run a prompt window against `cache` -> (y, cache)."""
+        raise NotImplementedError
+
+    def decode(self, p, cfg, x, position, cache, compute_dtype=None):
+        """One token per slot -> (y, cache).  x: (B, 1, C)."""
+        raise NotImplementedError
+
+    # -- optional capabilities ----------------------------------------
+    def apply_noncausal(self, p, cfg, x, ctx, positions=None,
+                        compute_dtype=None):
+        """Bidirectional attention: self (ctx=x) or cross (ctx=enc)."""
+        raise NotImplementedError(
+            f"backend {self.name!r} has no non-causal (encoder/cross) path")
+
+    def cross_precompute(self, p, cfg, ctx, compute_dtype=None):
+        """Precompute a decode-time cross-attention state from `ctx`."""
+        raise NotImplementedError(
+            f"backend {self.name!r} has no cross-attention decode path")
+
+    def cross_decode(self, p, cfg, x, state, compute_dtype=None):
+        """One-token cross-attention readout against that state."""
+        raise NotImplementedError(
+            f"backend {self.name!r} has no cross-attention decode path")
+
+
+def register_backend(name: str):
+    """Class decorator: instantiate + register under `name`."""
+    def deco(cls):
+        cls.name = name
+        _BACKENDS[name] = cls()
+        return cls
+    return deco
+
+
+def registered_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def resolve_backend_name(cfg) -> str:
+    """ModelConfig -> registered backend name (no validation)."""
+    return cfg.attention_backend if cfg.mixer == "attention" else cfg.mixer
+
+
+def get_backend(cfg_or_name) -> AttentionBackend:
+    """Resolve a ModelConfig (or a bare name) to its backend.
+
+    Raises with the registered names on an unknown backend, and
+    validates cfg.la at resolution time (single-schema rule: LACfg is
+    the only kernel-hyperparameter schema; its impl name must exist).
+    """
+    if isinstance(cfg_or_name, str):
+        name, cfg = cfg_or_name, None
+    else:
+        name, cfg = resolve_backend_name(cfg_or_name), cfg_or_name
+    backend = _BACKENDS.get(name)
+    if backend is None:
+        raise KeyError(
+            f"unknown attention backend {name!r}; registered backends: "
+            f"{registered_backends()} (cfg.mixer selects mla/mamba2, "
+            f"cfg.attention_backend selects linear/softmax)")
+    if cfg is not None:
+        la = cfg.la
+        if la.chunk <= 0:
+            raise ValueError(f"cfg.la.chunk must be positive, got {la.chunk}")
+        if la.backend != "auto":
+            # every mixer keys its kernel impl off cfg.la.backend; the
+            # linear/softmax families share the impl namespace
+            family = "softmax" if name == "softmax" else "linear"
+            _ops.get_kernel(family, la.backend)
+        if cfg.family == "encdec" and not (backend.supports_noncausal
+                                           and backend.supports_cross_decode):
+            capable = [n for n, b in _BACKENDS.items()
+                       if b.supports_noncausal and b.supports_cross_decode]
+            raise ValueError(
+                f"family 'encdec' needs a backend with encoder and "
+                f"cross-attention-decode paths; {name!r} has none — "
+                f"capable backends: {capable}")
+    return backend
+
+
+# SNIPPETS.md Based-mixer exemplar asked for exactly this name
+get_mixer = get_backend

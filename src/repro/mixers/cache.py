@@ -1,0 +1,40 @@
+"""Per-backend decode-cache types, in one namespace.
+
+Every backend's `init_cache` returns one of these (or a pytree of them);
+the serving engine scatters/gathers them purely as pytrees batched on
+their leading batch dim, so it never needs to know which backend — or
+cache shape — a model uses.
+
+  LAState    linear / mla    O(Dk·Dv) recurrent state (paper's story)
+  KVCache    softmax         O(S) per layer key/value ring
+  MambaCache mamba2          SSD state + depthwise-conv window tail
+  CrossState linear cross    precomputed encoder-side LA state (whisper)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.chunked import LAState, init_state
+from repro.core.ssd import SSDState, init_ssd_state
+
+__all__ = ["LAState", "init_state", "KVCache", "MambaCache", "CrossState",
+           "SSDState", "init_ssd_state"]
+
+
+class KVCache(NamedTuple):
+    """Softmax-backend decode cache: O(S) per layer."""
+
+    k: jnp.ndarray  # (B, Hkv, S, hd)
+    v: jnp.ndarray  # (B, Hkv, S, hd)
+
+
+class MambaCache(NamedTuple):
+    ssd: SSDState        # (B, H, state, hd)
+    conv: jnp.ndarray    # (B, width-1, conv_ch) — last inputs of the window
+
+
+class CrossState(NamedTuple):
+    s: jnp.ndarray  # (B, Hkv, D, D+1) — precomputed sum_j k_j (x) [v_j, 1]
+    p: jnp.ndarray  # (B, Hkv, D+1)

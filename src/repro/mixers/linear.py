@@ -1,0 +1,106 @@
+"""The paper's linear-attention backend (normalized kernelized attention).
+
+This IS the paper's contribution: f(x) = a + b x scores with the
+prefix-sum factorization (core.linear_attention -> core.chunked /
+kernels.linear_attention), l2-normalized q/k (Eq. 22), the analytic
+O(N D) backward (kernels.ops), and an O(D^2) recurrent decode state
+independent of context length.
+
+Learnable coefficients (paper §2.2) live here too: when
+cfg.la.learnable_coeffs is set, init adds scalar (a, b) params and apply
+routes through the differentiable-coefficient entry point — no caller
+ever branches on it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.linear_attention import la_attention, la_attention_decode, \
+    la_attention_learnable, la_attention_prefill
+from repro.core.numerics import l2_normalize
+from repro.mixers.base import register_backend
+from repro.mixers.cache import CrossState, init_state
+from repro.mixers.qkv import GQAProjectionBackend, split_heads
+from repro.models.common import dense
+
+F32 = jnp.float32
+
+
+@register_backend("linear")
+class LinearAttentionBackend(GQAProjectionBackend):
+    supports_cross_decode = True
+
+    def init(self, key, cfg, dtype=F32):
+        p = super().init(key, cfg, dtype)
+        if cfg.la.learnable_coeffs:
+            # paper §2.2: f(x) = a + b x with learnable per-layer (a, b),
+            # initialized at the Taylor coefficients of exp
+            p["la_a"] = jnp.asarray(cfg.la.a, F32)
+            p["la_b"] = jnp.asarray(cfg.la.b, F32)
+        return p
+
+    def apply(self, p, cfg, x, positions, compute_dtype=None):
+        q, k, v = self.project_qkv(p, cfg, x, positions, compute_dtype)
+        if "la_a" in p:  # learnable coefficients (paper §2.2)
+            o = la_attention_learnable(q, k, v, p["la_a"], p["la_b"], cfg.la)
+        else:
+            o = la_attention(q, k, v, cfg.la, causal=True)
+        return self.out(p, o, compute_dtype)
+
+    def apply_noncausal(self, p, cfg, x, ctx, positions=None,
+                        compute_dtype=None):
+        q, k, v = self.project_noncausal(p, cfg, x, ctx, positions,
+                                         compute_dtype)
+        o = la_attention(q, k, v, cfg.la, causal=False)
+        return self.out(p, o, compute_dtype)
+
+    def init_cache(self, cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+        # paper's deployment story: O(D^2) state, independent of max_len
+        hd = cfg.resolved_head_dim
+        return init_state(batch, cfg.num_kv_heads, hd, hd)
+
+    def prefill(self, p, cfg, x, positions, cache, compute_dtype=None):
+        q, k, v = self.project_qkv(p, cfg, x, positions, compute_dtype)
+        o, cache = la_attention_prefill(q, k, v, cfg.la, state=cache)
+        return self.out(p, o, compute_dtype), cache
+
+    def decode(self, p, cfg, x, position, cache, compute_dtype=None):
+        q, k, v = self.project_qkv(p, cfg, x, position, compute_dtype)
+        cache, o = la_attention_decode(
+            cache, q[:, :, 0], k[:, :, 0], v[:, :, 0], cfg.la)
+        return self.out(p, o[:, :, None], compute_dtype), cache
+
+    # -- cross-attention serving state (whisper decode) ----------------
+
+    def cross_precompute(self, p, cfg, ctx, compute_dtype=None) -> CrossState:
+        """Precompute the LA cross-attention state from encoder output."""
+        hd = cfg.resolved_head_dim
+        k = split_heads(dense(p["wk"], ctx, compute_dtype),
+                        cfg.num_kv_heads, hd)
+        v = split_heads(dense(p["wv"], ctx, compute_dtype),
+                        cfg.num_kv_heads, hd)
+        if cfg.la.normalize_qk:
+            k = l2_normalize(k)
+        vaug = jnp.concatenate(
+            [v.astype(F32), jnp.ones(v.shape[:-1] + (1,), F32)], -1)
+        s = jnp.einsum("bhjd,bhje->bhde", k.astype(F32), vaug,
+                       preferred_element_type=F32)
+        return CrossState(s=s, p=vaug.sum(axis=-2))
+
+    def cross_decode(self, p, cfg, x, state: CrossState, compute_dtype=None):
+        """One-token cross-attention readout against the precomputed state."""
+        hd = cfg.resolved_head_dim
+        b = x.shape[0]
+        q = split_heads(dense(p["wq"], x, compute_dtype), cfg.num_heads, hd)
+        if cfg.la.normalize_qk:
+            q = l2_normalize(q)
+        hkv = state.s.shape[1]
+        g = cfg.num_heads // hkv
+        qg = q[:, :, 0].reshape(b, hkv, g, hd).astype(F32)
+        la = cfg.la
+        f = (la.a * state.p[:, :, None, :]
+             + la.b * jnp.einsum("bhgd,bhde->bhge", qg, state.s,
+                                 preferred_element_type=F32))
+        o = f[..., :hd] / f[..., hd:]
+        o = o.reshape(b, cfg.num_heads, 1, hd).astype(x.dtype)
+        return self.out(p, o, compute_dtype)

@@ -1,0 +1,184 @@
+"""Mamba-2 (SSD) token-mixer backend.
+
+The paper (Appendix B, Table 3) identifies Mamba-2's recurrence
+S_t = gamma_t S_{t-1} + k_t v_t^T as decay-gated linear attention; this
+backend reuses the chunked-scan machinery of core/ssd.py with
+q = C, k = B (shared across heads, like MQA) and v = x heads.
+
+Layer structure (Mamba-2 paper / mamba_ssm reference):
+  in_proj: d -> [z(d_in), x(d_in), B(state), C(state), dt(H)]
+  causal depthwise conv(width 4) + silu over [x, B, C]
+  dt = softplus(dt + dt_bias); log_decay = -dt * exp(A_log)
+  o = SSD(C, B, x * dt, log_decay) + D ⊙ x
+  y = RMSNorm(o ⊙ silu(z)); out_proj: d_in -> d
+
+`fuses_ffn = True`: the mamba block IS both token and channel mixer, so
+blocks.py adds no separate FFN / second norm around it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ssd import init_ssd_state, ssd_causal, ssd_decode_step, \
+    ssd_fwd_chunked
+from repro.distributed.act_sharding import BATCH, MODEL, constrain
+from repro.mixers.base import AttentionBackend, register_backend
+from repro.mixers.cache import MambaCache
+from repro.models.common import dense, dense_init, norm_apply, norm_init
+
+F32 = jnp.float32
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim
+    return d_in, nheads, conv_ch
+
+
+def _causal_conv(x, w, b, left=None):
+    """Depthwise causal conv. x: (B, N, C); w: (W, C).  O(W) per token.
+
+    left: optional (B, W-1, C) context from a previous window (chunked
+    prefill); defaults to zeros (sequence start)."""
+    width = w.shape[0]
+    if left is None:
+        pads = jnp.pad(x, [(0, 0), (width - 1, 0), (0, 0)])
+    else:
+        pads = jnp.concatenate([left, x], axis=1)
+    out = sum(pads[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(width))
+    return out + b.astype(x.dtype)
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_in, nheads, _ = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * s.state_dim]
+    dt = zxbcdt[..., -nheads:]
+    return z, xbc, dt
+
+
+def _ssd_inputs(cfg, xbc, dt, dt_bias, a_log):
+    """conv'd xbc + raw dt -> (q, k, v, log_decay) for the SSD scan.
+
+    q/k (Mamba-2's C/B) are shared across heads: returned as (B, 1, N,
+    state) and the grouped SSD computes Q K^T once (core/ssd.py) —
+    materializing per-head copies would cost an H-fold blowup.
+    """
+    s = cfg.ssm
+    d_in, nheads, _ = _dims(cfg)
+    b, n, _ = xbc.shape
+    xs = xbc[..., :d_in]
+    bmat = xbc[..., d_in:d_in + s.state_dim]
+    cmat = xbc[..., d_in + s.state_dim:]
+    dt_f = jax.nn.softplus(dt.astype(F32) + dt_bias)          # (B, N, H)
+    log_decay = (-dt_f * jnp.exp(a_log)).transpose(0, 2, 1)   # (B, H, N)
+    log_decay = constrain(log_decay, BATCH, MODEL, None)
+    v = xs.reshape(b, n, nheads, s.head_dim).transpose(0, 2, 1, 3)
+    v = constrain(v, BATCH, MODEL, None, None)
+    v_eff = v * dt_f.transpose(0, 2, 1)[..., None].astype(v.dtype)
+    q = cmat[:, None]                                         # (B,1,N,state)
+    k = bmat[:, None]
+    return q, k, v, v_eff, log_decay
+
+
+@register_backend("mamba2")
+class Mamba2Backend(AttentionBackend):
+    fuses_ffn = True  # the mamba block carries no separate FFN
+
+    def init(self, key, cfg, dtype=F32):
+        s = cfg.ssm
+        d_in, nheads, conv_ch = _dims(cfg)
+        ks = jax.random.split(key, 4)
+        return {
+            "in_proj": dense_init(ks[0], cfg.d_model,
+                                  2 * d_in + 2 * s.state_dim + nheads,
+                                  dtype=dtype),
+            "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch),
+                                         F32)
+                       * (1.0 / s.conv_width) ** 0.5).astype(dtype),
+            "conv_b": jnp.zeros((conv_ch,), dtype),
+            "a_log": jnp.zeros((nheads,), F32),  # exp(a_log)=1 decay rate
+            "dt_bias": jnp.zeros((nheads,), F32),
+            "d_skip": jnp.ones((nheads,), F32),
+            "norm": norm_init(d_in, dtype=dtype),
+            "out_proj": dense_init(ks[2], d_in, cfg.d_model, dtype=dtype),
+        }
+
+    def apply(self, p, cfg, x, positions=None, compute_dtype=None):
+        zxbcdt = constrain(dense(p["in_proj"], x, compute_dtype,
+                                 gather_weight=True),
+                           BATCH, None, MODEL)
+        z, xbc, dt = _split_proj(cfg, zxbcdt)
+        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+        xbc = constrain(xbc, BATCH, None, MODEL)
+        q, k, v, v_eff, log_decay = _ssd_inputs(cfg, xbc, dt, p["dt_bias"],
+                                                p["a_log"])
+        if cfg.ssm.analytic_bwd:
+            o = ssd_causal(q, k, v_eff, log_decay, cfg.la.chunk)
+        else:
+            o, _ = ssd_fwd_chunked(q, k, v_eff, log_decay,
+                                   chunk=cfg.la.chunk)
+        o = o + p["d_skip"][None, :, None, None].astype(o.dtype) * v
+        b_, h_, n_, hd = o.shape
+        o = o.transpose(0, 2, 1, 3).reshape(b_, n_, h_ * hd)
+        y = norm_apply(p["norm"], o * jax.nn.silu(z).astype(o.dtype),
+                       cfg.norm)
+        return dense(p["out_proj"], y, compute_dtype)
+
+    def init_cache(self, cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+        s = cfg.ssm
+        d_in, nheads, conv_ch = _dims(cfg)
+        return MambaCache(
+            ssd=init_ssd_state(batch, nheads, s.state_dim, s.head_dim),
+            conv=jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        )
+
+    def prefill(self, p, cfg, x, positions, cache: MambaCache,
+                compute_dtype=None):
+        zxbcdt = dense(p["in_proj"], x, compute_dtype)
+        z, xbc, dt = _split_proj(cfg, zxbcdt)
+        tail = xbc[:, -(cfg.ssm.conv_width - 1):].astype(cache.conv.dtype)
+        # continuation-correct conv: the left context is the previous
+        # window's tail from the cache (zeros on a fresh cache)
+        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                       left=cache.conv.astype(xbc.dtype)))
+        q, k, v, v_eff, log_decay = _ssd_inputs(cfg, xbc, dt, p["dt_bias"],
+                                                p["a_log"])
+        o, ssd_st = ssd_fwd_chunked(q, k, v_eff, log_decay,
+                                    chunk=cfg.la.chunk, state=cache.ssd)
+        o = o + p["d_skip"][None, :, None, None].astype(o.dtype) * v
+        b_, h_, n_, hd = o.shape
+        o = o.transpose(0, 2, 1, 3).reshape(b_, n_, h_ * hd)
+        y = norm_apply(p["norm"], o * jax.nn.silu(z).astype(o.dtype),
+                       cfg.norm)
+        return dense(p["out_proj"], y, compute_dtype), MambaCache(ssd_st,
+                                                                  tail)
+
+    def decode(self, p, cfg, x, position, cache: MambaCache,
+               compute_dtype=None):
+        """x: (B, 1, C) — one token; O(D_state * hd) per head per token."""
+        zxbcdt = dense(p["in_proj"], x, compute_dtype)
+        z, xbc, dt = _split_proj(cfg, zxbcdt)
+        window = jnp.concatenate(
+            [cache.conv.astype(xbc.dtype), xbc], axis=1)  # (B, W, C)
+        new_conv = window[:, 1:].astype(cache.conv.dtype)
+        conv_out = jnp.einsum("bwc,wc->bc", window.astype(F32),
+                              p["conv_w"].astype(F32)) \
+            + p["conv_b"].astype(F32)
+        xbc1 = jax.nn.silu(conv_out)[:, None].astype(xbc.dtype)
+        q, k, v, v_eff, log_decay = _ssd_inputs(cfg, xbc1, dt, p["dt_bias"],
+                                                p["a_log"])
+        ssd_st, o = ssd_decode_step(cache.ssd, q[:, :, 0], k[:, :, 0],
+                                    v_eff[:, :, 0], log_decay[:, :, 0])
+        o = o + p["d_skip"][None, :, None].astype(o.dtype) * v[:, :, 0]
+        b_ = o.shape[0]
+        o = o.reshape(b_, 1, -1)
+        y = norm_apply(p["norm"], o * jax.nn.silu(z).astype(o.dtype),
+                       cfg.norm)
+        return dense(p["out_proj"], y, compute_dtype), MambaCache(ssd_st,
+                                                                  new_conv)

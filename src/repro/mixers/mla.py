@@ -1,0 +1,113 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with the paper's LA scores.
+
+The latent KV compression (kv_lora_rank=512) and rope/nope head split are
+kept from DeepSeek-V2; after per-head decompression the paper's normalized
+linear attention replaces softmax.  Adaptation note (DESIGN.md §Arch-
+applicability): with the linear scores the decode cache is the LA
+recurrent state — the compressed-KV cache that motivates MLA is subsumed,
+but the parameterization (low-rank Q/KV projections) is preserved.
+(A softmax-scored MLA would be a new one-file backend; see ROADMAP.)
+
+q : d -> q_lora -> H x (nope + rope)         (q_lora_rank = 1536)
+kv: d -> kv_lora (512) + shared k_rope (64)
+k : per head [k_nope(from kv_lora), k_rope(shared, rotated)]
+v : per head v_head_dim (128) from kv_lora
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear_attention import la_attention, la_attention_decode, \
+    la_attention_prefill
+from repro.distributed.act_sharding import BATCH, MODEL, constrain
+from repro.mixers.base import AttentionBackend, register_backend
+from repro.mixers.cache import init_state
+from repro.mixers.qkv import merge_heads
+from repro.models.common import dense, dense_init, norm_apply, norm_init
+from repro.models.rope import apply_rope
+
+F32 = jnp.float32
+
+
+@register_backend("mla")
+class MLABackend(AttentionBackend):
+    def init(self, key, cfg, dtype=F32):
+        m = cfg.mla
+        h = cfg.num_heads
+        ks = jax.random.split(key, 7)
+        qk_head = m.nope_head_dim + m.rope_head_dim
+        return {
+            "wq_down": dense_init(ks[0], cfg.d_model, m.q_lora_rank,
+                                  dtype=dtype),
+            "q_norm": norm_init(m.q_lora_rank, dtype=dtype),
+            "wq_up": dense_init(ks[1], m.q_lora_rank, h * qk_head,
+                                dtype=dtype),
+            "wkv_down": dense_init(ks[2], cfg.d_model,
+                                   m.kv_lora_rank + m.rope_head_dim,
+                                   dtype=dtype),
+            "kv_norm": norm_init(m.kv_lora_rank, dtype=dtype),
+            "wk_up": dense_init(ks[3], m.kv_lora_rank, h * m.nope_head_dim,
+                                dtype=dtype),
+            "wv_up": dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim,
+                                dtype=dtype),
+            "wo": dense_init(ks[5], h * m.v_head_dim, cfg.d_model,
+                             dtype=dtype),
+        }
+
+    def _qkv(self, p, cfg, x, positions, compute_dtype):
+        """Returns q, k: (B, H, N, nope+rope); v: (B, H, N, v_head)."""
+        m = cfg.mla
+        h = cfg.num_heads
+        b, n, _ = x.shape
+
+        ql = dense(p["wq_down"], x, compute_dtype)
+        ql = norm_apply(p["q_norm"], ql, cfg.norm)
+        q = dense(p["wq_up"], ql, compute_dtype).reshape(
+            b, n, h, m.nope_head_dim + m.rope_head_dim).transpose(0, 2, 1, 3)
+        q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+
+        kv = dense(p["wkv_down"], x, compute_dtype)
+        kv_l, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+        kv_l = norm_apply(p["kv_norm"], kv_l, cfg.norm)
+        k_nope = dense(p["wk_up"], kv_l, compute_dtype).reshape(
+            b, n, h, m.nope_head_dim).transpose(0, 2, 1, 3)
+        v = dense(p["wv_up"], kv_l, compute_dtype).reshape(
+            b, n, h, m.v_head_dim).transpose(0, 2, 1, 3)
+
+        k_rope = k_rope[:, None]  # (B, 1, N, rope) — shared across heads
+        q_rope = apply_rope(q_rope, positions, "standard",
+                            theta=cfg.rope_theta)
+        k_rope = apply_rope(k_rope, positions, "standard",
+                            theta=cfg.rope_theta)
+        k_rope = jnp.broadcast_to(k_rope, (b, h, n, m.rope_head_dim))
+
+        q = constrain(jnp.concatenate([q_nope, q_rope], -1),
+                      BATCH, MODEL, None, None)
+        k = constrain(jnp.concatenate([k_nope, k_rope], -1),
+                      BATCH, MODEL, None, None)
+        v = constrain(v, BATCH, MODEL, None, None)
+        return q, k, v
+
+    def apply(self, p, cfg, x, positions, compute_dtype=None):
+        q, k, v = self._qkv(p, cfg, x, positions, compute_dtype)
+        o = la_attention(q, k, v, cfg.la, causal=True)
+        return dense(p["wo"], merge_heads(o), compute_dtype)
+
+    def init_cache(self, cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+        m = cfg.mla
+        # linear scores: recurrent state over the decompressed per-head dims
+        return init_state(batch, cfg.num_heads,
+                          m.nope_head_dim + m.rope_head_dim, m.v_head_dim)
+
+    def prefill(self, p, cfg, x, positions, cache, compute_dtype=None):
+        q, k, v = self._qkv(p, cfg, x, positions, compute_dtype)
+        o, cache = la_attention_prefill(q, k, v, cfg.la, state=cache)
+        return dense(p["wo"], merge_heads(o), compute_dtype), cache
+
+    def decode(self, p, cfg, x, position, cache, compute_dtype=None):
+        q, k, v = self._qkv(p, cfg, x, position, compute_dtype)
+        cache, o = la_attention_decode(
+            cache, q[:, :, 0], k[:, :, 0], v[:, :, 0], cfg.la)
+        return dense(p["wo"], merge_heads(o[:, :, None]),
+                     compute_dtype), cache

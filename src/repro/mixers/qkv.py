@@ -1,0 +1,82 @@
+"""Shared GQA projection machinery for the attention-shaped backends.
+
+`GQAProjectionBackend` owns the wq/wk/wv/wo params, head split/merge and
+rope application; the linear and softmax backends subclass it and only
+differ in the score kernel + cache they run the projected heads through.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import BATCH, MODEL, constrain
+from repro.mixers.base import AttentionBackend
+from repro.models.common import dense, dense_init
+from repro.models.rope import apply_rope
+
+F32 = jnp.float32
+
+
+def split_heads(x, heads, hd):
+    b, n, _ = x.shape
+    return x.reshape(b, n, heads, hd).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x):
+    b, h, n, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * hd)
+
+
+class GQAProjectionBackend(AttentionBackend):
+    supports_noncausal = True
+
+    def init(self, key, cfg, dtype=F32):
+        hd = cfg.resolved_head_dim
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "wq": dense_init(k1, cfg.d_model, cfg.num_heads * hd,
+                             bias=cfg.qkv_bias, dtype=dtype),
+            "wk": dense_init(k2, cfg.d_model, cfg.num_kv_heads * hd,
+                             bias=cfg.qkv_bias, dtype=dtype),
+            "wv": dense_init(k3, cfg.d_model, cfg.num_kv_heads * hd,
+                             bias=cfg.qkv_bias, dtype=dtype),
+            "wo": dense_init(k4, cfg.num_heads * hd, cfg.d_model,
+                             dtype=dtype),
+        }
+
+    def project_qkv(self, p, cfg, x, positions, compute_dtype,
+                    rope: bool = True):
+        hd = cfg.resolved_head_dim
+        q = split_heads(dense(p["wq"], x, compute_dtype), cfg.num_heads, hd)
+        k = split_heads(dense(p["wk"], x, compute_dtype),
+                        cfg.num_kv_heads, hd)
+        v = split_heads(dense(p["wv"], x, compute_dtype),
+                        cfg.num_kv_heads, hd)
+        if rope and cfg.rope_kind not in ("none", "sinusoid"):
+            q = apply_rope(q, positions, cfg.rope_kind, cfg.rope_fraction,
+                           cfg.rope_theta, cfg.mrope_sections)
+            k = apply_rope(k, positions, cfg.rope_kind, cfg.rope_fraction,
+                           cfg.rope_theta, cfg.mrope_sections)
+        q = constrain(q, BATCH, MODEL, None, None)
+        k = constrain(k, BATCH, MODEL, None, None)
+        v = constrain(v, BATCH, MODEL, None, None)
+        return q, k, v
+
+    def project_noncausal(self, p, cfg, x, ctx, positions, compute_dtype):
+        """q from x, k/v from ctx (self-bidirectional or cross)."""
+        hd = cfg.resolved_head_dim
+        q = split_heads(dense(p["wq"], x, compute_dtype), cfg.num_heads, hd)
+        k = split_heads(dense(p["wk"], ctx, compute_dtype),
+                        cfg.num_kv_heads, hd)
+        v = split_heads(dense(p["wv"], ctx, compute_dtype),
+                        cfg.num_kv_heads, hd)
+        if positions is not None and cfg.rope_kind not in ("none",
+                                                           "sinusoid"):
+            q = apply_rope(q, positions, cfg.rope_kind, cfg.rope_fraction,
+                           cfg.rope_theta, cfg.mrope_sections)
+            k = apply_rope(k, positions, cfg.rope_kind, cfg.rope_fraction,
+                           cfg.rope_theta, cfg.mrope_sections)
+        return q, k, v
+
+    def out(self, p, o_heads, compute_dtype):
+        return dense(p["wo"], merge_heads(o_heads), compute_dtype)

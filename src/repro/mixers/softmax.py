@@ -1,0 +1,100 @@
+"""Softmax-attention backend — the Regular-Attention baseline.
+
+Scores go through the "softmax" KernelImpl family in kernels.ops:
+cfg.la.backend picks chunked online-softmax (xla — autodiff-safe, the
+training path) or the Pallas flash kernel (pallas / pallas_interpret —
+forward/inference benchmarking).
+
+Decode keeps an O(S) KVCache per layer and is PER-SLOT position correct:
+each continuously-batched slot scatters its new k/v at its own absolute
+position and masks its own context length, so slots at different depths
+decode exactly (this is what the O(D^2) linear backend gets for free).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as _ops
+from repro.mixers.base import register_backend
+from repro.mixers.cache import KVCache
+from repro.mixers.qkv import GQAProjectionBackend
+
+F32 = jnp.float32
+
+
+def _pos2d(positions):
+    """(B, N) positions; mrope (3, B, N) uses the temporal stream."""
+    return positions if positions.ndim == 2 else positions[0]
+
+
+def _scatter_window(big, new, start):
+    """Write `new` (B, Hkv, n, hd) into `big` at per-slot offsets (B,)."""
+    def one(b1, n1, s1):
+        return jax.lax.dynamic_update_slice(b1, n1, (0, s1, 0))
+    return jax.vmap(one)(big, new.astype(big.dtype), start)
+
+
+@register_backend("softmax")
+class SoftmaxAttentionBackend(GQAProjectionBackend):
+    @staticmethod
+    def _train_impl(cfg) -> str:
+        # "auto" must NOT resolve to pallas here: the flash kernel has no
+        # vjp, and apply/apply_noncausal are differentiated in training.
+        # An explicit cfg.la.backend="pallas" is honored (fwd-only bench).
+        return "xla" if cfg.la.backend == "auto" else cfg.la.backend
+
+    def apply(self, p, cfg, x, positions, compute_dtype=None):
+        q, k, v = self.project_qkv(p, cfg, x, positions, compute_dtype)
+        o = _ops.softmax_attention(q, k, v, causal=True, chunk=cfg.la.chunk,
+                                   backend=self._train_impl(cfg))
+        return self.out(p, o, compute_dtype)
+
+    def apply_noncausal(self, p, cfg, x, ctx, positions=None,
+                        compute_dtype=None):
+        q, k, v = self.project_noncausal(p, cfg, x, ctx, positions,
+                                         compute_dtype)
+        o = _ops.softmax_attention(q, k, v, causal=False,
+                                   chunk=cfg.la.chunk,
+                                   backend=self._train_impl(cfg))
+        return self.out(p, o, compute_dtype)
+
+    def init_cache(self, cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+        hd = cfg.resolved_head_dim
+        return KVCache(
+            k=jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+            v=jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+        )
+
+    def prefill(self, p, cfg, x, positions, cache, compute_dtype=None):
+        """Prompt window against a fresh cache (window attends only to
+        itself — softmax continuation prefill would need the cached
+        prefix; the recurrent backends are exact here, see ROADMAP)."""
+        q, k, v = self.project_qkv(p, cfg, x, positions, compute_dtype)
+        start = _pos2d(positions)[:, 0]
+        cache = KVCache(k=_scatter_window(cache.k, k, start),
+                        v=_scatter_window(cache.v, v, start))
+        o = _ops.softmax_attention(q, k, v, causal=True, chunk=cfg.la.chunk,
+                                   backend=cfg.la.backend)
+        return self.out(p, o, compute_dtype), cache
+
+    def decode(self, p, cfg, x, position, cache, compute_dtype=None):
+        """x: (B, 1, C); position: (B, 1) PER-SLOT absolute positions."""
+        q, k, v = self.project_qkv(p, cfg, x, position, compute_dtype)
+        pos = _pos2d(position)[:, 0]                       # (B,)
+        cache = KVCache(k=_scatter_window(cache.k, k, pos),
+                        v=_scatter_window(cache.v, v, pos))
+        b, hkv, s, hd = cache.k.shape
+        # per-slot context length: slot i attends to its first pos_i+1 keys
+        mask_j = (jax.lax.broadcasted_iota(jnp.int32, (b, s), 1)
+                  <= pos[:, None])                          # (B, S)
+        g = cfg.num_heads // hkv
+        qg = q.reshape(b, hkv, g, 1, hd).astype(F32)
+        s_ = jnp.einsum("bhgid,bhjd->bhgij", qg, cache.k.astype(F32),
+                        preferred_element_type=F32) / hd ** 0.5
+        s_ = jnp.where(mask_j[:, None, None, None, :], s_, -1e30)
+        pmat = jax.nn.softmax(s_, axis=-1)
+        o = jnp.einsum("bhgij,bhjd->bhgid", pmat, cache.v.astype(F32),
+                       preferred_element_type=F32)
+        o = o.reshape(b, cfg.num_heads, 1, hd).astype(x.dtype)
+        return self.out(p, o, compute_dtype), cache

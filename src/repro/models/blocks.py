@@ -1,35 +1,23 @@
 """Transformer / SSM blocks: norm + mixer + FFN with residuals.
 
-Every block kind exposes (init, apply, init_cache, prefill, decode) so
-model.py can scan over stacked layer params uniformly.  `apply` returns
-(y, aux) where aux is the MoE load-balancing loss (0.0 otherwise).
+The token mixer is resolved ONCE per call through the attention-backend
+registry (`repro.mixers.get_backend`) — blocks never branch on backend
+or mixer strings.  Every backend exposes (init, apply, init_cache,
+prefill, decode), so model.py can scan over stacked layer params
+uniformly; `backend.fuses_ffn` tells the block whether the mixer already
+contains its channel mixing (mamba2).  `apply` returns (y, aux) where
+aux is the MoE load-balancing loss (0.0 otherwise).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention as attn
-from repro.models import mamba2 as mb
-from repro.models import mla as mla_mod
+from repro.mixers import get_backend
 from repro.models import moe as moe_mod
 from repro.models.common import mlp_apply, mlp_init, norm_apply, norm_init
 
 ZERO = jnp.float32(0.0)
-
-
-# ---------------------------------------------------------------------------
-# Mixer dispatch
-# ---------------------------------------------------------------------------
-
-_MIXERS = {
-    "attention": (attn.attn_init, attn.attn_apply, attn.attn_init_cache,
-                  attn.attn_prefill, attn.attn_decode),
-    "mla": (mla_mod.mla_init, mla_mod.mla_apply, mla_mod.mla_init_cache,
-            mla_mod.mla_prefill, mla_mod.mla_decode),
-    "mamba2": (mb.mamba_init, mb.mamba_apply, mb.mamba_init_cache,
-               mb.mamba_prefill, mb.mamba_decode),
-}
 
 
 def _ffn_init(key, cfg, dtype, dense_ffn: bool = False):
@@ -49,25 +37,25 @@ def _ffn_apply(p, cfg, x, compute_dtype, dropless: bool = False):
 
 
 # ---------------------------------------------------------------------------
-# Decoder block (causal self-attention / SSD + FFN)
+# Decoder block (causal mixer + FFN)
 # ---------------------------------------------------------------------------
 
 def block_init(key, cfg, dtype=jnp.float32, dense_ffn: bool = False):
+    backend = get_backend(cfg)
     k1, k2 = jax.random.split(key)
-    mixer_init = _MIXERS[cfg.mixer][0]
     p = {"ln1": norm_init(cfg.d_model, cfg.norm, dtype),
-         "mixer": mixer_init(k1, cfg, dtype)}
-    if cfg.mixer != "mamba2":  # mamba blocks have no separate FFN
+         "mixer": backend.init(k1, cfg, dtype)}
+    if not backend.fuses_ffn:
         p["ln2"] = norm_init(cfg.d_model, cfg.norm, dtype)
         p["ffn"] = _ffn_init(k2, cfg, dtype, dense_ffn)
     return p
 
 
 def block_apply(p, cfg, x, positions, compute_dtype=None):
-    mixer_apply = _MIXERS[cfg.mixer][1]
+    backend = get_backend(cfg)
     h = norm_apply(p["ln1"], x, cfg.norm)
-    attn_out = mixer_apply(p["mixer"], cfg, h, positions, compute_dtype)
-    if cfg.mixer == "mamba2":
+    attn_out = backend.apply(p["mixer"], cfg, h, positions, compute_dtype)
+    if backend.fuses_ffn:
         return x + attn_out, ZERO
     if cfg.parallel_residual:
         ffn_out, aux = _ffn_apply(p["ffn"],
@@ -82,15 +70,15 @@ def block_apply(p, cfg, x, positions, compute_dtype=None):
 
 
 def block_init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
-    return _MIXERS[cfg.mixer][2](cfg, batch, max_len, dtype)
+    return get_backend(cfg).init_cache(cfg, batch, max_len, dtype)
 
 
 def block_prefill(p, cfg, x, positions, cache, compute_dtype=None):
-    prefill = _MIXERS[cfg.mixer][3]
+    backend = get_backend(cfg)
     h = norm_apply(p["ln1"], x, cfg.norm)
-    attn_out, cache = prefill(p["mixer"], cfg, h, positions, cache,
-                              compute_dtype)
-    if cfg.mixer == "mamba2":
+    attn_out, cache = backend.prefill(p["mixer"], cfg, h, positions, cache,
+                                      compute_dtype)
+    if backend.fuses_ffn:
         return x + attn_out, cache
     if cfg.parallel_residual:
         ffn_out, _ = _ffn_apply(p["ffn"], cfg,
@@ -105,11 +93,11 @@ def block_prefill(p, cfg, x, positions, cache, compute_dtype=None):
 
 
 def block_decode(p, cfg, x, position, cache, compute_dtype=None):
-    decode = _MIXERS[cfg.mixer][4]
+    backend = get_backend(cfg)
     h = norm_apply(p["ln1"], x, cfg.norm)
-    attn_out, cache = decode(p["mixer"], cfg, h, position, cache,
-                             compute_dtype)
-    if cfg.mixer == "mamba2":
+    attn_out, cache = backend.decode(p["mixer"], cfg, h, position, cache,
+                                     compute_dtype)
+    if backend.fuses_ffn:
         return x + attn_out, cache
     if cfg.parallel_residual:
         ffn_out, _ = _ffn_apply(p["ffn"], cfg,
@@ -128,17 +116,19 @@ def block_decode(p, cfg, x, position, cache, compute_dtype=None):
 # ---------------------------------------------------------------------------
 
 def enc_block_init(key, cfg, dtype=jnp.float32):
+    backend = get_backend(cfg)
     k1, k2 = jax.random.split(key)
     return {"ln1": norm_init(cfg.d_model, cfg.norm, dtype),
-            "attn": attn.attn_init(k1, cfg, dtype),
+            "attn": backend.init(k1, cfg, dtype),
             "ln2": norm_init(cfg.d_model, cfg.norm, dtype),
             "ffn": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)}
 
 
 def enc_block_apply(p, cfg, x, compute_dtype=None):
+    backend = get_backend(cfg)
     h = norm_apply(p["ln1"], x, cfg.norm)
-    x = x + attn.attn_apply_noncausal(p["attn"], cfg, h, h,
-                                      compute_dtype=compute_dtype)
+    x = x + backend.apply_noncausal(p["attn"], cfg, h, h,
+                                    compute_dtype=compute_dtype)
     x = x + mlp_apply(p["ffn"], norm_apply(p["ln2"], x, cfg.norm),
                       cfg.mlp_act, compute_dtype)
     return x
@@ -149,21 +139,23 @@ def enc_block_apply(p, cfg, x, compute_dtype=None):
 # ---------------------------------------------------------------------------
 
 def xdec_block_init(key, cfg, dtype=jnp.float32):
+    backend = get_backend(cfg)
     k1, k2, k3 = jax.random.split(key, 3)
     return {"ln1": norm_init(cfg.d_model, cfg.norm, dtype),
-            "self": attn.attn_init(k1, cfg, dtype),
+            "self": backend.init(k1, cfg, dtype),
             "ln_x": norm_init(cfg.d_model, cfg.norm, dtype),
-            "cross": attn.attn_init(k2, cfg, dtype),
+            "cross": backend.init(k2, cfg, dtype),
             "ln2": norm_init(cfg.d_model, cfg.norm, dtype),
             "ffn": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)}
 
 
 def xdec_block_apply(p, cfg, x, enc, positions, compute_dtype=None):
+    backend = get_backend(cfg)
     h = norm_apply(p["ln1"], x, cfg.norm)
-    x = x + attn.attn_apply(p["self"], cfg, h, positions, compute_dtype)
+    x = x + backend.apply(p["self"], cfg, h, positions, compute_dtype)
     h = norm_apply(p["ln_x"], x, cfg.norm)
-    x = x + attn.attn_apply_noncausal(p["cross"], cfg, h, enc,
-                                      compute_dtype=compute_dtype)
+    x = x + backend.apply_noncausal(p["cross"], cfg, h, enc,
+                                    compute_dtype=compute_dtype)
     x = x + mlp_apply(p["ffn"], norm_apply(p["ln2"], x, cfg.norm),
                       cfg.mlp_act, compute_dtype)
     return x
@@ -171,27 +163,30 @@ def xdec_block_apply(p, cfg, x, enc, positions, compute_dtype=None):
 
 def xdec_block_prefill(p, cfg, x, enc, positions, cache, compute_dtype=None):
     """cache: {"self": mixer cache, "cross": CrossState}."""
+    backend = get_backend(cfg)
     h = norm_apply(p["ln1"], x, cfg.norm)
-    attn_out, self_cache = attn.attn_prefill(p["self"], cfg, h, positions,
-                                             cache["self"], compute_dtype)
+    attn_out, self_cache = backend.prefill(p["self"], cfg, h, positions,
+                                           cache["self"], compute_dtype)
     x = x + attn_out
-    cross_state = attn.cross_precompute(p["cross"], cfg, enc, compute_dtype)
+    cross_state = backend.cross_precompute(p["cross"], cfg, enc,
+                                           compute_dtype)
     h = norm_apply(p["ln_x"], x, cfg.norm)
-    x = x + attn.attn_apply_noncausal(p["cross"], cfg, h, enc,
-                                      compute_dtype=compute_dtype)
+    x = x + backend.apply_noncausal(p["cross"], cfg, h, enc,
+                                    compute_dtype=compute_dtype)
     x = x + mlp_apply(p["ffn"], norm_apply(p["ln2"], x, cfg.norm),
                       cfg.mlp_act, compute_dtype)
     return x, {"self": self_cache, "cross": cross_state}
 
 
 def xdec_block_decode(p, cfg, x, position, cache, compute_dtype=None):
+    backend = get_backend(cfg)
     h = norm_apply(p["ln1"], x, cfg.norm)
-    attn_out, self_cache = attn.attn_decode(p["self"], cfg, h, position,
-                                            cache["self"], compute_dtype)
+    attn_out, self_cache = backend.decode(p["self"], cfg, h, position,
+                                          cache["self"], compute_dtype)
     x = x + attn_out
     h = norm_apply(p["ln_x"], x, cfg.norm)
-    x = x + attn.cross_decode(p["cross"], cfg, h, cache["cross"],
-                              compute_dtype)
+    x = x + backend.cross_decode(p["cross"], cfg, h, cache["cross"],
+                                 compute_dtype)
     x = x + mlp_apply(p["ffn"], norm_apply(p["ln2"], x, cfg.norm),
                       cfg.mlp_act, compute_dtype)
     return x, {"self": self_cache, "cross": cache["cross"]}

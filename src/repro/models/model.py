@@ -266,7 +266,7 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None):
     if dtype is None:
         dtype = dtype_of(cfg.compute_dtype)
     if cfg.family == "encdec":
-        from repro.models.attention import CrossState
+        from repro.mixers.cache import CrossState
         hd = cfg.resolved_head_dim
         hkv = cfg.num_kv_heads
         self_c = _stacked_cache(cfg, cfg.num_layers, batch, max_len,

@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.act_sharding import BATCH, MODEL, constrain
+from repro.distributed.act_sharding import MODEL, constrain
 from repro.models.common import dense_init
 
 F32 = jnp.float32

@@ -4,12 +4,13 @@ For a context of length S the softmax backend needs a KV cache of
 O(S * Hkv * hd) per layer, while the paper's linear backend keeps a
 recurrent state of O(Hkv * Dk * (Dv+1)) — independent of S.  These
 functions compute exact byte counts for benchmarks/run.py (Table 1) and
-the serving engine's admission control.
+the serving engine's admission control.  `cache_bytes` is exact for ANY
+registered backend: it eval_shapes the backend's own `init_cache`
+through the model, so new backends are accounted for automatically.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import model as mdl
 

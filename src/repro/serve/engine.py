@@ -7,19 +7,25 @@ slot's cache is the O(D^2) recurrent state, so slot memory does not
 grow with generated length — admission control is trivial compared to
 paged KV caches.
 
-Per-slot state isolation: all caches are batched on their batch dim; a
-new request's prefilled cache is scattered into its slot index.
+The engine is backend-agnostic: the mixer is resolved once through the
+attention-backend registry (which validates the config and names the
+registered backends on error), and all cache handling is pure pytree
+scatter/gather batched on the leading batch dim — LAState, KVCache,
+MambaCache and CrossState flow through the same code.  Slots decode at
+PER-SLOT positions (cache["pos"] is per-sequence), which the softmax
+backend's KV scatter/masking honors exactly.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.mixers import get_backend
 from repro.models import model as mdl
 
 F32 = jnp.float32
@@ -38,6 +44,7 @@ class Engine:
     def __init__(self, cfg, params, *, max_slots: int = 4,
                  max_len: int = 4096, eos_id: int = 2, seed: int = 0):
         self.cfg = cfg
+        self.backend = get_backend(cfg)  # validates cfg at admission time
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len

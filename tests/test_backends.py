@@ -1,0 +1,244 @@
+"""Attention-backend registry: resolution errors, kernel-impl parity
+(xla vs pallas_interpret vs ref) at the backend level, prefill+decode vs
+full-sequence apply, GQA noncausal paths, and the per-slot softmax
+decode-position regression (continuous batching)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LACfg, ModelConfig
+from repro.kernels import ops
+from repro.mixers import get_backend, get_mixer, registered_backends
+
+B, N, D_MODEL, HEADS, KV_HEADS = 2, 24, 32, 4, 2
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=1, d_model=D_MODEL,
+                num_heads=HEADS, num_kv_heads=KV_HEADS, d_ff=64,
+                vocab_size=64, la=LACfg(chunk=8, backend="xla"))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _with_impl(cfg, impl):
+    return dataclasses.replace(cfg, la=dataclasses.replace(cfg.la,
+                                                           backend=impl))
+
+
+def _x(key, n=N):
+    return jax.random.normal(key, (B, n, D_MODEL)) * 0.2
+
+
+def _positions(n=N):
+    return jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (B, n))
+
+
+# ---------------------------------------------------------------------------
+# Registry resolution + validation
+# ---------------------------------------------------------------------------
+
+def test_four_builtin_backends_registered():
+    assert {"linear", "softmax", "mla", "mamba2"} <= set(
+        registered_backends())
+    assert get_mixer is get_backend
+
+
+def test_mixer_resolution():
+    assert get_backend(_cfg()).name == "linear"
+    assert get_backend(_cfg(attention_backend="softmax")).name == "softmax"
+    assert get_backend(_cfg(mixer="mamba2")).name == "mamba2"
+    # non-attention mixers resolve by mixer name, not attention_backend
+    assert get_backend(_cfg(mixer="mamba2",
+                            attention_backend="softmax")).name == "mamba2"
+
+
+def test_unknown_backend_lists_registered_names():
+    with pytest.raises(KeyError) as exc:
+        get_backend(_cfg(attention_backend="performer"))
+    msg = str(exc.value)
+    assert "performer" in msg
+    for name in registered_backends():
+        assert name in msg
+
+
+def test_unknown_kernel_impl_lists_registered_names():
+    with pytest.raises(ValueError) as exc:
+        get_backend(_with_impl(_cfg(), "cuda"))
+    msg = str(exc.value)
+    assert "cuda" in msg and "xla" in msg and "pallas" in msg
+
+
+def test_nonpositive_chunk_rejected():
+    with pytest.raises(ValueError, match="chunk"):
+        get_backend(dataclasses.replace(_cfg(), la=LACfg(chunk=0)))
+
+
+def test_encdec_requires_cross_capability():
+    """A softmax whisper config must fail at resolution, not deep inside
+    a jitted prefill (the softmax backend has no cross-decode path)."""
+    cfg = _cfg(family="encdec", attention_backend="softmax",
+               encoder_layers=2, encoder_seq=8)
+    with pytest.raises(ValueError, match="cross"):
+        get_backend(cfg)
+    assert get_backend(dataclasses.replace(
+        cfg, attention_backend="linear")).name == "linear"
+
+
+def test_kernel_registry_families():
+    for family in ("linear", "softmax"):
+        names = ops.kernel_names(family)
+        assert {"xla", "pallas", "pallas_interpret", "ref"} <= set(names)
+    with pytest.raises(ValueError, match="registered"):
+        ops.get_kernel("linear", "nope")
+
+
+# ---------------------------------------------------------------------------
+# Kernel-impl parity through the backend interface
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend_name,impls", [
+    ("linear", ["xla", "pallas_interpret", "ref"]),
+    ("softmax", ["xla", "pallas_interpret", "ref"]),
+])
+def test_impl_parity_forward(backend_name, impls, rng):
+    """All registered impls of a score family agree on apply()."""
+    cfg = _cfg(attention_backend=backend_name)
+    be = get_backend(cfg)
+    p = be.init(rng, cfg, jnp.float32)
+    x, pos = _x(jax.random.fold_in(rng, 1)), _positions()
+    outs = [be.apply(p, _with_impl(cfg, impl), x, pos) for impl in impls]
+    for impl, o in zip(impls[1:], outs[1:]):
+        np.testing.assert_allclose(
+            np.asarray(o), np.asarray(outs[0]), rtol=2e-4, atol=2e-4,
+            err_msg=f"{backend_name}: {impl} != xla")
+
+
+@pytest.mark.parametrize("backend_name",
+                         ["linear", "softmax", "mla", "mamba2"])
+def test_prefill_decode_matches_apply(backend_name, rng):
+    """prefill(prompt) + decode x k == apply over the full sequence,
+    at PER-SLOT decode positions, for every registered mixer."""
+    kw = {}
+    if backend_name in ("linear", "softmax"):
+        kw["attention_backend"] = backend_name
+    elif backend_name == "mla":
+        from repro.configs.base import MLACfg
+        kw.update(mixer="mla",
+                  mla=MLACfg(kv_lora_rank=16, q_lora_rank=16,
+                             rope_head_dim=4, nope_head_dim=8,
+                             v_head_dim=8))
+    else:
+        from repro.configs.base import SSMCfg
+        kw.update(mixer="mamba2",
+                  ssm=SSMCfg(state_dim=8, head_dim=8, expand=2))
+    cfg = _cfg(**kw)
+    be = get_backend(cfg)
+    p = be.init(rng, cfg, jnp.float32)
+    x, pos = _x(jax.random.fold_in(rng, 2)), _positions()
+    full = be.apply(p, cfg, x, pos)
+
+    split = N - 4
+    cache = be.init_cache(cfg, B, N + 8, jnp.float32)
+    y, cache = be.prefill(p, cfg, x[:, :split], pos[:, :split], cache)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, :split]),
+                               rtol=2e-4, atol=2e-4)
+    for i in range(split, N):
+        y, cache = be.decode(p, cfg, x[:, i:i + 1], pos[:, i:i + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(y[:, 0]), np.asarray(full[:, i]),
+            rtol=1e-3, atol=1e-3, err_msg=f"{backend_name}: token {i}")
+
+
+@pytest.mark.parametrize("backend_name", ["linear", "softmax"])
+def test_noncausal_gqa_matches_oracle(backend_name, rng):
+    """apply_noncausal (GQA: 4 query / 2 KV heads) against the quadratic
+    oracles, both self-bidirectional and cross-shaped ctx."""
+    from repro.kernels import ref
+    cfg = _cfg(attention_backend=backend_name, rope_kind="none")
+    be = get_backend(cfg)
+    p = be.init(rng, cfg, jnp.float32)
+    x = _x(jax.random.fold_in(rng, 3))
+    ctx = _x(jax.random.fold_in(rng, 4), n=N + 7)
+
+    from repro.core.numerics import l2_normalize
+    from repro.mixers.qkv import merge_heads
+    from repro.models.common import dense
+    q, k, v = be.project_noncausal(p, cfg, x, ctx, None, None)
+    if backend_name == "linear":
+        o_ref = ref.la_ref(l2_normalize(q), l2_normalize(k), v, causal=False)
+    else:
+        o_ref = ref.softmax_ref(q, k, v, causal=False)
+    want = dense(p["wo"], merge_heads(o_ref), None)
+    got = be.apply_noncausal(p, cfg, x, ctx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_learnable_coeffs_through_backend(rng):
+    """cfg.la.learnable_coeffs routes through the same interface: params
+    gain (a, b) scalars, output matches fixed coefficients at init, and
+    gradients reach the coefficients (paper §2.2)."""
+    cfg = _cfg()
+    lcfg = dataclasses.replace(cfg, la=dataclasses.replace(
+        cfg.la, learnable_coeffs=True))
+    be = get_backend(lcfg)
+    p = be.init(rng, lcfg, jnp.float32)
+    assert "la_a" in p and "la_b" in p
+    x, pos = _x(jax.random.fold_in(rng, 5)), _positions()
+    fixed = be.apply({k: v for k, v in p.items()
+                      if k not in ("la_a", "la_b")}, cfg, x, pos)
+    learn = be.apply(p, lcfg, x, pos)
+    np.testing.assert_allclose(np.asarray(learn), np.asarray(fixed),
+                               rtol=1e-5, atol=1e-5)
+    g = jax.grad(lambda p_: jnp.sum(be.apply(p_, lcfg, x, pos) ** 2))(p)
+    assert float(jnp.abs(g["la_a"])) > 0
+
+
+# ---------------------------------------------------------------------------
+# Per-slot decode positions (continuous batching regression)
+# ---------------------------------------------------------------------------
+
+def test_softmax_decode_per_slot_positions(rng):
+    """Two slots at DIFFERENT depths must decode exactly like each slot
+    would alone (the old code read position[0, 0] for the whole batch)."""
+    cfg = _cfg(attention_backend="softmax")
+    be = get_backend(cfg)
+    p = be.init(rng, cfg, jnp.float32)
+    n_a, n_b = 13, 6  # slot depths BEFORE the new token
+    xs = _x(jax.random.fold_in(rng, 6), n=n_a + 1)
+
+    def run_alone(n_ctx):
+        """Prefill n_ctx tokens, then decode token n_ctx."""
+        cache = be.init_cache(cfg, B, 32, jnp.float32)
+        pos = _positions(n_ctx)
+        _, cache = be.prefill(p, cfg, xs[:, :n_ctx], pos, cache)
+        y, _ = be.decode(p, cfg, xs[:, n_ctx:n_ctx + 1],
+                         jnp.full((B, 1), n_ctx, jnp.int32), cache)
+        return y
+
+    alone_a = run_alone(n_a)
+    alone_b = run_alone(n_b)
+
+    # batched: slot 0 at depth n_a, slot 1 at depth n_b, one shared cache
+    cache = be.init_cache(cfg, B, 32, jnp.float32)
+    _, cache_a = be.prefill(p, cfg, xs[:, :n_a], _positions(n_a),
+                            be.init_cache(cfg, B, 32, jnp.float32))
+    _, cache_b = be.prefill(p, cfg, xs[:, :n_b], _positions(n_b),
+                            be.init_cache(cfg, B, 32, jnp.float32))
+    mixed = jax.tree.map(
+        lambda a, b_: jnp.stack([a[0], b_[1]]), cache_a, cache_b)
+    x_new = jnp.stack([xs[0, n_a], xs[1, n_b]])[:, None]
+    position = jnp.asarray([[n_a], [n_b]], jnp.int32)
+    y, _ = be.decode(p, cfg, x_new, position, mixed)
+
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(alone_a[0]),
+                               rtol=1e-4, atol=1e-4,
+                               err_msg="deep slot depends on shallow slot")
+    np.testing.assert_allclose(np.asarray(y[1]), np.asarray(alone_b[1]),
+                               rtol=1e-4, atol=1e-4,
+                               err_msg="shallow slot read the deep slot's "
+                                       "position (old pos = position[0,0])")

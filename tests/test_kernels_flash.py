@@ -6,7 +6,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.models.attention import softmax_chunked
+from repro.core.softmax import softmax_chunked
 
 SHAPES = [(1, 2, 32, 16), (2, 4, 128, 32), (2, 2, 200, 64)]
 

@@ -16,7 +16,7 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core import chunked
-from repro.core.linear_attention import LAConfig, la_attention
+from repro.core.linear_attention import LACfg, la_attention
 from repro.core.numerics import l2_normalize
 from repro.kernels import ops, ref
 
@@ -92,7 +92,7 @@ def test_qk_scale_invariance(dims_, seed, scale):
     q = jax.random.normal(ks[0], (b, h, n, d))
     k = jax.random.normal(ks[1], (b, hkv, n, d))
     v = jax.random.normal(ks[2], (b, hkv, n, d))
-    cfg = LAConfig(chunk=c, backend="xla")
+    cfg = LACfg(chunk=c, backend="xla")
     o1 = la_attention(q, k, v, cfg)
     o2 = la_attention(q * scale, k * scale, v, cfg)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),

@@ -64,9 +64,14 @@ def test_cache_bytes_comparison_full_scale():
     assert la * 100 < kv, (la, kv)
 
 
-def test_engine_matches_sequential(rng):
-    """Continuous batching must not change any request's output."""
-    cfg = get_config("qwen2.5-3b", smoke=True)
+@pytest.mark.parametrize("backend", ["linear", "softmax"])
+def test_engine_matches_sequential(backend, rng):
+    """Continuous batching must not change any request's output — for
+    the O(D^2)-state linear backend AND the KV-cache softmax baseline
+    (slots sit at different depths, exercising per-slot positions)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("qwen2.5-3b", smoke=True),
+                              attention_backend=backend)
     params = mdl.init_params(cfg, rng)
     prompts = [
         list(range(3, 10)), list(range(5, 17)), list(range(4, 8)),
