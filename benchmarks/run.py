@@ -13,6 +13,8 @@ paper's scaling claims (slopes) and memory ratios:
                       structural HLO model (the paper measures dram reads)
   fig5     Fig. 5   — end-to-end LLM training: LA vs softmax loss curves
                       on the paper's pythia architecture (reduced scale)
+  serve              — serving-engine tokens/s per backend + byte-budget
+                      admission counts (O(D^2) state vs O(S) KV cache)
   roofline           — prints the 40-cell tables from artifacts/dryrun
 
 Every entry prints `name,metric,value` CSV rows.
@@ -212,6 +214,49 @@ def bench_fig5(steps: int = 30):
     print(f"fig5,final_loss_gap,{abs(la_final-sm_final):.4f}")
 
 
+def bench_serve(requests: int = 6, max_new: int = 8):
+    """Serving engine throughput + the admission story: tokens/s of the
+    continuous-batching engine per backend, and how many concurrent
+    sequences one byte budget admits for the O(D^2) linear state vs the
+    O(S) softmax KV cache (the paper's Table 1 memory ratio, as
+    admission control)."""
+    import dataclasses
+
+    from repro.configs.registry import get_config
+    from repro.models import model as mdl
+    from repro.serve.cache import per_slot_bytes
+    from repro.serve.engine import Engine, Request
+    from repro.serve.scheduler import ByteBudget
+
+    max_len = 512
+    base = get_config("qwen2.5-3b", smoke=True)
+    for backend in ("linear", "softmax"):
+        cfg = dataclasses.replace(base, attention_backend=backend)
+        params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+        engine = Engine(cfg, params, max_slots=4, max_len=max_len)
+        for rid in range(requests):
+            engine.submit(Request(rid=rid, prompt=list(range(3, 15)),
+                                  max_new_tokens=max_new))
+        t0 = time.perf_counter()
+        done = engine.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(v) for v in done.values())
+        print(f"serve,{backend}_tokens_per_s,{toks/dt:.1f}")
+        print(f"serve,{backend}_per_slot_bytes,"
+              f"{per_slot_bytes(cfg, max_len)}")
+
+    budget = 8 * per_slot_bytes(
+        dataclasses.replace(base, attention_backend="softmax"), max_len)
+    slots = {}
+    for backend in ("linear", "softmax"):
+        cfg = dataclasses.replace(base, attention_backend=backend)
+        slots[backend] = ByteBudget(budget, max_slots=1 << 20) \
+            .resolve_slots(cfg, max_len)
+        print(f"serve,byte_budget_slots_{backend},{slots[backend]}")
+    print(f"serve,admission_ratio_linear_over_softmax,"
+          f"{slots['linear']/slots['softmax']:.1f}")
+
+
 def bench_roofline():
     """Emit the roofline tables from the dry-run artifacts."""
     from repro.analysis.roofline import format_table, load_artifacts
@@ -229,7 +274,7 @@ def bench_roofline():
 
 
 BENCHES = {"table1": bench_table1, "fig2": bench_fig2, "fig3": bench_fig3,
-           "fig4": bench_fig4, "fig5": bench_fig5,
+           "fig4": bench_fig4, "fig5": bench_fig5, "serve": bench_serve,
            "roofline": bench_roofline}
 
 

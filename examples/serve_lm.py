@@ -1,7 +1,10 @@
-"""Batched serving with continuous batching.
+"""Batched serving through the request-lifecycle engine (serving v2).
 
-Five requests share two engine slots; each slot's memory is the paper's
-O(D^2) recurrent state, so generation length never grows the footprint.
+Requests share slots resolved by a BYTE BUDGET: each linear-backend
+slot's memory is the paper's O(D^2) recurrent state (independent of
+generation length), so a budget that fits a handful of softmax KV
+caches admits dozens of linear slots.  One request samples with its own
+temperature/seed; outputs stream per token with lifecycle states.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,8 +13,10 @@ import jax
 from repro.configs.registry import get_config
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import model as mdl
-from repro.serve.cache import cache_bytes
+from repro.serve.cache import cache_bytes, per_slot_bytes
 from repro.serve.engine import Engine, Request
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import ByteBudget
 
 cfg = get_config("qwen2.5-3b", smoke=True)
 tok = ByteTokenizer()
@@ -21,15 +26,23 @@ print(f"decode cache @ 1k ctx:  {cache_bytes(cfg, 4, 1024):,} bytes")
 print(f"decode cache @ 64k ctx: {cache_bytes(cfg, 4, 65536):,} bytes "
       f"(identical — the paper's O(D^2) state)")
 
-engine = Engine(cfg, params, max_slots=2, max_len=256, eos_id=-1)
+budget = 4 * per_slot_bytes(cfg, 256)  # pays for 4 linear slots exactly
+engine = Engine(cfg, params, max_len=256, eos_id=-1,
+                policy=ByteBudget(budget), prefill_chunk=8)
+print(f"byte budget {budget:,} -> {engine.num_slots} linear slots "
+      f"({per_slot_bytes(cfg, 256):,} bytes/slot)")
+
 prompts = ["hello world", "linear attention", "tpu kernels",
            "prefix sums", "state space"]
 for rid, text in enumerate(prompts):
     ids = [t % cfg.vocab_size for t in tok.encode(text)]
-    engine.submit(Request(rid=rid, prompt=ids, max_new_tokens=8))
+    sampling = SamplingParams(temperature=0.8, top_k=40, seed=rid) \
+        if rid == 0 else SamplingParams()  # request 0 samples, rest greedy
+    engine.submit(Request(rid=rid, prompt=ids, max_new_tokens=8,
+                          sampling=sampling))
 
-done = engine.run()
-for rid in sorted(done):
-    print(f"request {rid}: prompt={prompts[rid]!r} -> "
-          f"{len(done[rid])} tokens {done[rid]}")
+for out in engine.stream():
+    if out.finished:
+        print(f"request {out.rid} finished ({out.finish_reason}): "
+              f"{engine.request(out.rid).generated}")
 print("OK")

@@ -13,8 +13,16 @@ import jax.numpy as jnp
 F32 = jnp.float32
 
 
-def softmax_chunked(q, k, v, *, causal: bool = True, chunk: int = 512):
-    """q: (B,H,Nq,D); k,v: (B,Hkv,Nk,D).  Online-softmax over KV chunks."""
+def softmax_chunked(q, k, v, *, causal: bool = True, chunk: int = 512,
+                    q_offset=None):
+    """q: (B,H,Nq,D); k,v: (B,Hkv,Nk,D).  Online-softmax over KV chunks.
+
+    q_offset: optional (B,) int32 — PER-SEQUENCE global position of query
+    0 (serving continuation prefill: each slot's prompt window sits at its
+    own absolute offset inside a max_len KV cache, and attends to its
+    cached prefix plus itself).  None keeps the training convention
+    (query i is global position i + Nk - Nq, shared across the batch).
+    """
     b, h, nq, d = q.shape
     dv = v.shape[-1]
     hkv, nk = k.shape[1], k.shape[2]
@@ -38,8 +46,13 @@ def softmax_chunked(q, k, v, *, causal: bool = True, chunk: int = 512):
                                preferred_element_type=F32)
         jk = ti * c + jax.lax.broadcasted_iota(jnp.int32, (nq, c), 1)
         mask = jk < nk  # padded keys never attend
-        if causal:
+        if causal and q_offset is None:
             mask = mask & (iq + offs >= jk)
+        if causal and q_offset is not None:
+            # per-sequence offsets: (B, nq, c) -> broadcast over (hkv, g)
+            mask = (mask[None]
+                    & (iq[None] + q_offset[:, None, None] >= jk[None]))
+            mask = mask[:, None, None]
         s = jnp.where(mask, s, -1e30)
         m_new = jnp.maximum(m, s.max(-1))
         corr = jnp.exp(m - m_new)
@@ -53,7 +66,23 @@ def softmax_chunked(q, k, v, *, causal: bool = True, chunk: int = 512):
     m0 = jnp.full((b, hkv, g, nq), -1e30, F32)
     l0 = jnp.zeros((b, hkv, g, nq), F32)
     a0 = jnp.zeros((b, hkv, g, nq, dv), F32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
-                                  (k_c, v_c, jnp.arange(t)))
+    if q_offset is None:
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                      (k_c, v_c, jnp.arange(t)))
+    else:
+        # serving continuation prefill: keys beyond the deepest slot's
+        # causal frontier contribute exactly zero — bound the KV walk at
+        # that chunk (dynamic trip count; this path is inference-only,
+        # the q_offset=None training path keeps the differentiable scan)
+        t_live = jnp.minimum(
+            (jnp.max(q_offset) + nq + c - 1) // c, t).astype(jnp.int32)
+
+        def body(ti, carry):
+            kc = jax.lax.dynamic_index_in_dim(k_c, ti, 0, keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(v_c, ti, 0, keepdims=False)
+            carry, _ = step(carry, (kc, vc, ti))
+            return carry
+
+        m, l, acc = jax.lax.fori_loop(0, t_live, body, (m0, l0, a0))
     o = acc / l[..., None]
     return o.reshape(b, h, nq, dv).astype(q.dtype)

@@ -18,7 +18,6 @@ exponents are differences of monotone cumsums, always <= 0).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -236,31 +235,14 @@ def ssd_bwd_chunked(q, k, v, log_decay, o, omega, chunk: int = 128):
             dv_o.astype(v.dtype), dld.astype(log_decay.dtype))
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(4,))
-def ssd_causal(q, k, v, log_decay, chunk: int = 128):
+def ssd_causal(q, k, v, log_decay, chunk: int = 128,
+               backend: str = "auto"):
     """SSD with the analytic O(N D) backward (training entry point).
 
-    q, k: (B, G, N, Dk) with G | H; v: (B, H, N, Dv); ld: (B, H, N).
+    Thin alias of `kernels.ops.ssd_causal`: impl selection goes through
+    the "ssd"-family KernelImpl registry (xla / pallas / pallas_interpret
+    / ref), not an internal TPU branch.  Kept here for callers that think
+    in core-scan terms; the custom-vjp wiring lives in kernels/ops.py.
     """
-    o, _ = ssd_fwd_chunked(q, k, v, log_decay, chunk=chunk)
-    return o
-
-
-def _ssd_fwd(q, k, v, log_decay, chunk):
-    if jax.default_backend() == "tpu":
-        from repro.kernels.ssd import ssd_fwd_pallas
-        o = ssd_fwd_pallas(q, k, v, log_decay, chunk=chunk)
-    else:
-        o, _ = ssd_fwd_chunked(q, k, v, log_decay, chunk=chunk)
-    return o, (q, k, v, log_decay, o)
-
-
-def _ssd_bwd(chunk, res, omega):
-    q, k, v, log_decay, o = res
-    if jax.default_backend() == "tpu":
-        from repro.kernels.ssd import ssd_bwd_pallas
-        return ssd_bwd_pallas(q, k, v, log_decay, o, omega, chunk=chunk)
-    return ssd_bwd_chunked(q, k, v, log_decay, o, omega, chunk=chunk)
-
-
-ssd_causal.defvjp(_ssd_fwd, _ssd_bwd)
+    from repro.kernels.ops import ssd_causal as _entry  # lazy: no cycle
+    return _entry(q, k, v, log_decay, chunk, backend)

@@ -2,8 +2,9 @@
 
 Kernel selection is data-driven: each (family, impl) pair is a registered
 `KernelImpl`.  Families are the attention score shapes ("linear" — the
-paper's kernelized attention — and "softmax", the Regular-Attention
-baseline); impls are execution backends:
+paper's kernelized attention —, "softmax", the Regular-Attention
+baseline, and "ssd", the decay-gated Mamba-2 duality of Appendix B);
+impls are execution backends:
 
   "xla"              chunked lax.scan (core.chunked / core.softmax)
   "pallas"           Pallas TPU kernels (kernels.linear_attention / .flash_attention)
@@ -30,13 +31,14 @@ import jax.numpy as jnp
 
 from repro.core import chunked as _chunked
 from repro.core import softmax as _softmax
+from repro.core import ssd as _ssd
 from repro.core.chunked import LAState, init_state, la_decode_step, la_noncausal
 from repro.kernels import ref as _ref
 
 __all__ = [
     "KernelImpl", "register_kernel", "get_kernel", "kernel_names",
     "la_causal", "la_causal_learnable", "la_prefill", "la_noncausal",
-    "la_decode_step", "softmax_attention",
+    "la_decode_step", "softmax_attention", "ssd_causal",
     "LAState", "init_state", "default_backend", "DEFAULT_CHUNK",
 ]
 
@@ -58,11 +60,14 @@ def default_backend() -> str:
 class KernelImpl:
     """One execution backend of one attention family.
 
-    fwd: linear family: (q, k, v, a, b, chunk) -> (o, g)
-         softmax family: (q, k, v, causal, chunk) -> o
-    bwd: linear family only: (q, k, v, o, g, omega, a, b, chunk) ->
-         (dq, dk, dv); None means "fall back to the xla backward"
-         (the oracle has no analytic backward, softmax uses autodiff).
+    fwd: linear family:  (q, k, v, a, b, chunk) -> (o, g)
+         softmax family: (q, k, v, causal, chunk, q_offset) -> o
+         ssd family:     (q, k, v, log_decay, chunk) -> o
+    bwd: linear family: (q, k, v, o, g, omega, a, b, chunk) ->
+         (dq, dk, dv); ssd family: (q, k, v, log_decay, o, omega, chunk)
+         -> (dq, dk, dv, dlog_decay).  None means "fall back to the xla
+         backward" (the oracles have no analytic backward, softmax uses
+         autodiff).
     """
 
     family: str
@@ -142,16 +147,19 @@ register_kernel("linear", "ref", fwd=_linear_ref_fwd)  # bwd: xla fallback
 # Softmax family impls
 # ---------------------------------------------------------------------------
 
-def _softmax_xla_fwd(q, k, v, causal, chunk):
-    return _softmax.softmax_chunked(q, k, v, causal=causal, chunk=chunk)
+def _softmax_xla_fwd(q, k, v, causal, chunk, q_offset=None):
+    return _softmax.softmax_chunked(q, k, v, causal=causal, chunk=chunk,
+                                    q_offset=q_offset)
 
 
 def _softmax_pallas_fwd(interpret):
-    def fwd(q, k, v, causal, chunk):
+    def fwd(q, k, v, causal, chunk, q_offset=None):
         from repro.kernels import flash_attention as _fl
-        if not causal:  # the flash kernel is causal-only; stream chunks
-            return _softmax.softmax_chunked(q, k, v, causal=False,
-                                            chunk=chunk)
+        if not causal or q_offset is not None:
+            # the flash kernel is causal-only and knows no per-sequence
+            # offsets (serving continuation prefill); stream chunks
+            return _softmax.softmax_chunked(q, k, v, causal=causal,
+                                            chunk=chunk, q_offset=q_offset)
         # the flash kernel doesn't understand GQA yet: this materializes
         # the H/Hkv-fold KV copy in HBM (ROADMAP: index the KV BlockSpec
         # by head//group instead)
@@ -161,7 +169,10 @@ def _softmax_pallas_fwd(interpret):
     return fwd
 
 
-def _softmax_ref_fwd(q, k, v, causal, chunk):
+def _softmax_ref_fwd(q, k, v, causal, chunk, q_offset=None):
+    if q_offset is not None:
+        return _softmax.softmax_chunked(q, k, v, causal=causal, chunk=chunk,
+                                        q_offset=q_offset)
     return _ref.softmax_ref(q, k, v, causal=causal)
 
 
@@ -172,13 +183,84 @@ register_kernel("softmax", "ref", fwd=_softmax_ref_fwd)
 
 
 def softmax_attention(q, k, v, *, causal: bool = True,
-                      chunk: int = DEFAULT_CHUNK, backend: str = "auto"):
+                      chunk: int = DEFAULT_CHUNK, backend: str = "auto",
+                      q_offset=None):
     """Softmax-baseline attention through the registry.
 
     q: (B, H, N, D); k, v: (B, Hkv, N, D), Hkv | H.  Autodiff-safe (the
     chunked scan recomputes per-chunk probabilities in the backward).
+    q_offset: optional (B,) global position of query 0 per sequence
+    (serving continuation prefill against a populated KV cache).
     """
-    return get_kernel("softmax", backend).fwd(q, k, v, causal, chunk)
+    return get_kernel("softmax", backend).fwd(q, k, v, causal, chunk,
+                                              q_offset)
+
+
+# ---------------------------------------------------------------------------
+# SSD family impls (Mamba-2 / decay-gated LA — paper Appendix B, Table 3)
+# ---------------------------------------------------------------------------
+
+def _ssd_xla_fwd(q, k, v, log_decay, chunk):
+    o, _ = _ssd.ssd_fwd_chunked(q, k, v, log_decay, chunk=chunk)
+    return o
+
+
+def _ssd_pallas_fwd(interpret):
+    def fwd(q, k, v, log_decay, chunk):
+        from repro.kernels import ssd as _kssd
+        return _kssd.ssd_fwd_pallas(q, k, v, log_decay, chunk=chunk,
+                                    interpret=interpret)
+    return fwd
+
+
+def _ssd_pallas_bwd(interpret):
+    def bwd(q, k, v, log_decay, o, omega, chunk):
+        from repro.kernels import ssd as _kssd
+        return _kssd.ssd_bwd_pallas(q, k, v, log_decay, o, omega,
+                                    chunk=chunk, interpret=interpret)
+    return bwd
+
+
+def _ssd_ref_fwd(q, k, v, log_decay, chunk):
+    # the oracle is ungrouped: expand the shared q/k to per-head copies
+    h = v.shape[1]
+    return _ref.ssd_ref(_ref.expand_kv(q, h), _ref.expand_kv(k, h),
+                        v, log_decay)
+
+
+register_kernel("ssd", "xla", fwd=_ssd_xla_fwd, bwd=_ssd.ssd_bwd_chunked)
+register_kernel("ssd", "pallas", fwd=_ssd_pallas_fwd(False),
+                bwd=_ssd_pallas_bwd(False))
+register_kernel("ssd", "pallas_interpret", fwd=_ssd_pallas_fwd(True),
+                bwd=_ssd_pallas_bwd(True))
+register_kernel("ssd", "ref", fwd=_ssd_ref_fwd)  # bwd: xla fallback
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def ssd_causal(q, k, v, log_decay, chunk: int = 128, backend: str = "auto"):
+    """SSD (Mamba-2) with the analytic O(N D) backward (training entry).
+
+    q, k: (B, G, N, Dk) with G | H; v: (B, H, N, Dv); log_decay:
+    (B, H, N) <= 0.  `backend` selects the "ssd"-family KernelImpl, so
+    cfg.la.backend picks the Mamba-2 impl through the same registry as
+    the linear/softmax families ("auto": pallas on TPU, else xla).
+    """
+    return get_kernel("ssd", backend).fwd(q, k, v, log_decay, chunk)
+
+
+def _ssd_causal_fwd(q, k, v, log_decay, chunk, backend):
+    o = get_kernel("ssd", backend).fwd(q, k, v, log_decay, chunk)
+    return o, (q, k, v, log_decay, o)
+
+
+def _ssd_causal_bwd(chunk, backend, res, omega):
+    q, k, v, log_decay, o = res
+    impl = get_kernel("ssd", backend)
+    bwd = impl.bwd or _ssd.ssd_bwd_chunked
+    return bwd(q, k, v, log_decay, o, omega, chunk)
+
+
+ssd_causal.defvjp(_ssd_causal_fwd, _ssd_causal_bwd)
 
 
 # ---------------------------------------------------------------------------

@@ -1,12 +1,19 @@
-"""Serving launcher: batched generation through the continuous-batching
+"""Serving launcher: batched generation through the request-lifecycle
 engine (serve/engine.py).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
         --requests 8 --max-new 16
+
+Admission defaults to fixed slots; --budget-mb switches to ByteBudget
+admission (the slot count then resolves from the backend's exact
+per-slot decode-cache bytes, so linear admits far more than softmax at
+the same budget).  --json-out writes the throughput record for CI
+artifacts.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -15,36 +22,72 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.models import model as mdl
+from repro.serve.cache import per_slot_bytes
 from repro.serve.engine import Engine, Request
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import ByteBudget, FixedSlots
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--backend", default=None,
+                    help="override cfg.attention_backend (linear|softmax)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="ByteBudget admission instead of fixed slots")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill window (tokens)")
     ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--json-out", default=None,
+                    help="also write the result record to this path")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
+    if args.backend:
+        cfg = dataclasses.replace(cfg, attention_backend=args.backend)
     params = mdl.init_params(cfg, jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, max_slots=args.slots, max_len=512)
+    if args.budget_mb is not None:
+        policy = ByteBudget(int(args.budget_mb * 1024 * 1024))
+    else:
+        policy = FixedSlots(args.slots)
+    engine = Engine(cfg, params, max_len=args.max_len, policy=policy,
+                    prefill_chunk=args.prefill_chunk)
 
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         prompt = rng.integers(3, cfg.vocab_size,
                               size=args.prompt_len).tolist()
         engine.submit(Request(rid=rid, prompt=prompt,
-                              max_new_tokens=args.max_new))
+                              max_new_tokens=args.max_new, sampling=sp))
     t0 = time.perf_counter()
     done = engine.run()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(v) for v in done.values())
-    print(json.dumps({
-        "requests": len(done), "generated_tokens": total_tokens,
+    record = {
+        "arch": args.arch,
+        "backend": cfg.attention_backend if cfg.mixer == "attention"
+        else cfg.mixer,
+        "policy": type(engine.policy).__name__,
+        "slots": engine.num_slots,
+        "per_slot_bytes": per_slot_bytes(cfg, args.max_len),
+        "requests": len(done),
+        "generated_tokens": total_tokens,
         "wall_s": round(dt, 3),
-        "tokens_per_s": round(total_tokens / dt, 1)}))
+        "tokens_per_s": round(total_tokens / dt, 1),
+    }
+    print(json.dumps(record))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(record, f, indent=2)
 
 
 if __name__ == "__main__":

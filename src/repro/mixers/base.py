@@ -127,8 +127,9 @@ def get_backend(cfg_or_name) -> AttentionBackend:
             raise ValueError(f"cfg.la.chunk must be positive, got {la.chunk}")
         if la.backend != "auto":
             # every mixer keys its kernel impl off cfg.la.backend; the
-            # linear/softmax families share the impl namespace
-            family = "softmax" if name == "softmax" else "linear"
+            # linear/softmax/ssd families share the impl namespace
+            family = {"softmax": "softmax", "mamba2": "ssd"}.get(
+                name, "linear")
             _ops.get_kernel(family, la.backend)
         if cfg.family == "encdec" and not (backend.supports_noncausal
                                            and backend.supports_cross_decode):

@@ -20,8 +20,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.ssd import init_ssd_state, ssd_causal, ssd_decode_step, \
-    ssd_fwd_chunked
+from repro.core.ssd import init_ssd_state, ssd_decode_step, ssd_fwd_chunked
+from repro.kernels.ops import ssd_causal
 from repro.distributed.act_sharding import BATCH, MODEL, constrain
 from repro.mixers.base import AttentionBackend, register_backend
 from repro.mixers.cache import MambaCache
@@ -119,7 +119,8 @@ class Mamba2Backend(AttentionBackend):
         q, k, v, v_eff, log_decay = _ssd_inputs(cfg, xbc, dt, p["dt_bias"],
                                                 p["a_log"])
         if cfg.ssm.analytic_bwd:
-            o = ssd_causal(q, k, v_eff, log_decay, cfg.la.chunk)
+            o = ssd_causal(q, k, v_eff, log_decay, cfg.la.chunk,
+                           cfg.la.backend)
         else:
             o, _ = ssd_fwd_chunked(q, k, v_eff, log_decay,
                                    chunk=cfg.la.chunk)
@@ -142,11 +143,15 @@ class Mamba2Backend(AttentionBackend):
                 compute_dtype=None):
         zxbcdt = dense(p["in_proj"], x, compute_dtype)
         z, xbc, dt = _split_proj(cfg, zxbcdt)
-        tail = xbc[:, -(cfg.ssm.conv_width - 1):].astype(cache.conv.dtype)
         # continuation-correct conv: the left context is the previous
-        # window's tail from the cache (zeros on a fresh cache)
+        # window's tail from the cache (zeros on a fresh cache); the new
+        # tail spans [left, window] so windows shorter than the conv
+        # width still carry the right context
+        left = cache.conv.astype(xbc.dtype)
+        tail = jnp.concatenate([left, xbc], axis=1)[
+            :, -(cfg.ssm.conv_width - 1):].astype(cache.conv.dtype)
         xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"],
-                                       left=cache.conv.astype(xbc.dtype)))
+                                       left=left))
         q, k, v, v_eff, log_decay = _ssd_inputs(cfg, xbc, dt, p["dt_bias"],
                                                 p["a_log"])
         o, ssd_st = ssd_fwd_chunked(q, k, v_eff, log_decay,

@@ -67,15 +67,18 @@ class SoftmaxAttentionBackend(GQAProjectionBackend):
         )
 
     def prefill(self, p, cfg, x, positions, cache, compute_dtype=None):
-        """Prompt window against a fresh cache (window attends only to
-        itself — softmax continuation prefill would need the cached
-        prefix; the recurrent backends are exact here, see ROADMAP)."""
+        """CONTINUATION prefill: the window's k/v are scattered at each
+        slot's absolute offset, then the window queries attend to the
+        whole cached prefix plus themselves (per-slot `q_offset` causal
+        mask) — chunked prefill is exact for the baseline too, matching
+        what the recurrent backends get from their carried state."""
         q, k, v = self.project_qkv(p, cfg, x, positions, compute_dtype)
         start = _pos2d(positions)[:, 0]
         cache = KVCache(k=_scatter_window(cache.k, k, start),
                         v=_scatter_window(cache.v, v, start))
-        o = _ops.softmax_attention(q, k, v, causal=True, chunk=cfg.la.chunk,
-                                   backend=cfg.la.backend)
+        o = _ops.softmax_attention(q, cache.k, cache.v, causal=True,
+                                   chunk=cfg.la.chunk,
+                                   backend=cfg.la.backend, q_offset=start)
         return self.out(p, o, compute_dtype), cache
 
     def decode(self, p, cfg, x, position, cache, compute_dtype=None):

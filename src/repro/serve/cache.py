@@ -22,6 +22,14 @@ def cache_bytes(cfg, batch: int, max_len: int) -> int:
                for leaf in jax.tree.leaves(shapes))
 
 
+def per_slot_bytes(cfg, max_len: int) -> int:
+    """Exact MARGINAL decode-cache bytes of one extra concurrent
+    sequence at this context — the unit the ByteBudget admission policy
+    spends.  Softmax pays O(max_len) per slot; the paper's linear state
+    is O(D^2) regardless of max_len."""
+    return cache_bytes(cfg, 2, max_len) - cache_bytes(cfg, 1, max_len)
+
+
 def kv_cache_bytes_analytic(cfg, batch: int, seq: int,
                             dtype_bytes: int = 2) -> int:
     """Softmax-backend KV cache: B * Hkv * S * hd * 2 (k and v) per layer."""

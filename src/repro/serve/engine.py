@@ -1,25 +1,37 @@
-"""Batched serving engine with continuous batching.
+"""Continuous-batching serving engine — the request-lifecycle API.
 
-Fixed-slot engine: up to `max_slots` concurrent sequences share one
-jitted decode step; finished slots are immediately refilled from the
-queue (continuous batching).  With the paper's linear backend every
-slot's cache is the O(D^2) recurrent state, so slot memory does not
-grow with generated length — admission control is trivial compared to
-paged KV caches.
+Layering (serving API v2):
 
-The engine is backend-agnostic: the mixer is resolved once through the
-attention-backend registry (which validates the config and names the
-registered backends on error), and all cache handling is pure pytree
-scatter/gather batched on the leading batch dim — LAState, KVCache,
-MambaCache and CrossState flow through the same code.  Slots decode at
-PER-SLOT positions (cache["pos"] is per-sequence), which the softmax
-backend's KV scatter/masking honors exactly.
+  sampling.SamplingParams   per-request temperature / top-k / top-p /
+                            stop tokens / seed, applied INSIDE the one
+                            jitted decode step (greedy slots keep the
+                            exact argmax path).
+  scheduler.Scheduler       FIFO queue + slot array; admission policies
+                            (FixedSlots, ByteBudget) resolve the slot
+                            count — ByteBudget from the exact per-slot
+                            decode-cache bytes, so the paper's O(D^2)
+                            linear state admits orders of magnitude more
+                            concurrent sequences than the softmax KV
+                            cache at the same HBM budget.
+  Engine                    owns the batched cache + jitted steps and
+                            surfaces the lifecycle: step() advances one
+                            engine iteration and returns StepOutputs;
+                            stream() yields them; run() drains to a
+                            rid -> tokens dict.
+
+Prefill is CHUNKED and in-place: each prompt window runs through
+`model.prefill` on the slot's own row of the batched cache (pytree
+gather -> batch-1 prefill continuing from the slot's position -> pytree
+scatter back), so admission allocates no throwaway max_len cache and a
+long prompt compiles one window-sized prefill instead of one giant
+prompt-length one.  Windowed prefill is exact for every backend: the
+recurrent mixers carry their state, and the softmax baseline's windows
+attend to the cached prefix (continuation prefill, mixers/softmax.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Optional
+from typing import Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,123 +39,265 @@ import numpy as np
 
 from repro.mixers import get_backend
 from repro.models import model as mdl
-
-F32 = jnp.float32
+from repro.serve import sampling as smp
+from repro.serve.scheduler import AdmissionPolicy, FixedSlots, \
+    RequestState, Scheduler, StepOutput
 
 
 @dataclasses.dataclass
 class Request:
     rid: int
-    prompt: list            # token ids
+    prompt: list                     # token ids
     max_new_tokens: int = 32
-    temperature: float = 0.0
+    temperature: float = 0.0         # shorthand; `sampling` wins if set
+    sampling: Optional[smp.SamplingParams] = None
     generated: Optional[list] = None
+    state: RequestState = RequestState.QUEUED
+    finish_reason: Optional[str] = None
 
+    def resolved_sampling(self) -> smp.SamplingParams:
+        return self.sampling or smp.SamplingParams(
+            temperature=self.temperature)
+
+
+# ---------------------------------------------------------------------------
+# Batched-cache slot addressing
+# ---------------------------------------------------------------------------
+
+def _cache_batch_dims(cfg, slots: int, max_len: int):
+    """Per-leaf batch-dim pytree, found by growing the slot count by one
+    under eval_shape (layer-stacked leaves carry their batch dim at
+    different positions; -1 marks leaves that don't scale with slots)."""
+    a = jax.eval_shape(lambda: mdl.init_cache(cfg, slots, max_len))
+    b = jax.eval_shape(lambda: mdl.init_cache(cfg, slots + 1, max_len))
+
+    def dim(sa, sb):
+        for d, (x, y) in enumerate(zip(sa.shape, sb.shape)):
+            if x != y:
+                return d
+        return -1
+
+    return jax.tree.map(dim, a, b)
+
+
+def _gather_slot(cache, bdims, slot):
+    """Batch-1 view of one slot's rows (slot may be a traced scalar)."""
+    return jax.tree.map(
+        lambda x, d: x if d < 0
+        else jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=d),
+        cache, bdims)
+
+
+def _scatter_slot(cache, small, bdims, slot):
+    """Write a batch-1 cache back into the slot's rows."""
+    return jax.tree.map(
+        lambda big, s, d: big if d < 0
+        else jax.lax.dynamic_update_slice_in_dim(
+            big, s.astype(big.dtype), slot, axis=d),
+        cache, small, bdims)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
 
 class Engine:
     def __init__(self, cfg, params, *, max_slots: int = 4,
-                 max_len: int = 4096, eos_id: int = 2, seed: int = 0):
+                 max_len: int = 4096, eos_id: int = 2, seed: int = 0,
+                 policy: Optional[AdmissionPolicy] = None,
+                 prefill_chunk: Optional[int] = None):
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "the serving engine targets decoder-only families; "
+                "whisper decode needs per-request encoder frames")
         self.cfg = cfg
         self.backend = get_backend(cfg)  # validates cfg at admission time
         self.params = params
-        self.max_slots = max_slots
         self.max_len = max_len
         self.eos_id = eos_id
-        self.queue: deque[Request] = deque()
-        self.slots: list[Optional[Request]] = [None] * max_slots
-        self.cache = mdl.init_cache(cfg, max_slots, max_len)
-        self.next_tokens = np.zeros((max_slots,), np.int32)
-        self.remaining = np.zeros((max_slots,), np.int64)
-        self.key = jax.random.PRNGKey(seed)
+        self.seed = seed
+        self.prefill_chunk = prefill_chunk
+        self.policy = policy if policy is not None else FixedSlots(max_slots)
+        self.num_slots = self.policy.resolve_slots(cfg, max_len)
+        self.max_slots = self.num_slots  # engine-v1 attribute, kept
+        self.scheduler = Scheduler(self.num_slots)
 
-        self._decode = jax.jit(
-            lambda p, c, t: mdl.decode_step(p, cfg, c, t))
-        # prefill uses batch 1 and is scattered into the slot
-        self._prefill = jax.jit(
-            lambda p, b, c: mdl.prefill(p, cfg, b, c))
+        n = self.num_slots
+        self.cache = mdl.init_cache(cfg, n, max_len)
+        self._bdims = _cache_batch_dims(cfg, n, max_len)
+        self.next_tokens = np.zeros((n,), np.int32)
+        self.remaining = np.zeros((n,), np.int64)
+        # per-slot sampling state, mirrored into the jitted decode step
+        self._temp = np.zeros((n,), np.float32)
+        self._topk = np.zeros((n,), np.int32)
+        self._topp = np.ones((n,), np.float32)
+        self._keys = np.zeros((n, 2), np.uint32)
+        self._params_of: List[Optional[smp.SamplingParams]] = [None] * n
+        self._requests: Dict[int, Request] = {}
+
+        def decode_fn(params, cache, tokens, keys, temp, topk, topp):
+            logits, cache = mdl.decode_step(params, cfg, cache, tokens)
+            toks, keys = smp.sample(logits, keys, temp, topk, topp)
+            return toks, cache, keys
+
+        self._decode = jax.jit(decode_fn)
+        self._sample1 = jax.jit(smp.sample)   # prefill's first token
+        self._prefill_fns: dict = {}          # (window_len, fresh) -> jit
 
     # -- public API ----------------------------------------------------
-    def submit(self, req: Request):
-        req.generated = []
-        self.queue.append(req)
+    def request(self, rid: int) -> Request:
+        """The submitted Request (its generated tokens, state and
+        finish_reason update in place as the engine advances)."""
+        return self._requests[rid]
 
-    def run(self) -> dict[int, list]:
+    def submit(self, req: Request):
+        # cache positions written: len(prompt) prefill + max_new-1 decode
+        need = len(req.prompt) + req.max_new_tokens - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)} tokens) + "
+                f"max_new_tokens ({req.max_new_tokens}) needs {need} cache "
+                f"positions but the engine was built with max_len="
+                f"{self.max_len}")
+        if req.generated is None:
+            req.generated = []
+        self._requests[req.rid] = req
+        self.scheduler.submit(req)
+
+    def step(self) -> List[StepOutput]:
+        """Advance one engine iteration: admit + prefill queued requests
+        into free slots, then decode one token for every decoding slot.
+        Returns the StepOutputs emitted by this iteration."""
+        outputs: List[StepOutput] = []
+        for slot, req in self.scheduler.admit():
+            outputs.append(self._admit_into(slot, req))
+        outputs.extend(self._decode_once())
+        return outputs
+
+    def stream(self) -> Iterator[StepOutput]:
+        """Yield StepOutputs until queue and slots drain."""
+        while self.scheduler.has_work():
+            yield from self.step()
+
+    def run(self) -> Dict[int, list]:
         """Run until queue + slots drain.  Returns rid -> generated ids."""
-        done: dict[int, list] = {}
-        while self._admit() or any(s is not None for s in self.slots):
-            self._step(done)
+        done: Dict[int, list] = {}
+        for out in self.stream():
+            if out.finished:
+                done[out.rid] = self._requests[out.rid].generated
         return done
 
-    # -- internals -------------------------------------------------------
-    def _admit(self) -> bool:
-        admitted = False
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.queue:
-                req = self.queue.popleft()
-                self._prefill_into(i, req)
-                self.slots[i] = req
-                admitted = True
-        return admitted
+    # -- admission + chunked prefill -----------------------------------
+    def _prefill_fn(self, n: int, fresh: bool):
+        """Jitted: one n-token prompt window through the slot's own rows
+        of the batched cache (gather -> prefill -> scatter).  `fresh`
+        zeroes the slot's rows first (new admission over a stale slot);
+        later windows continue from the carried position/state."""
+        key = (n, fresh)
+        if key not in self._prefill_fns:
+            cfg, bdims = self.cfg, self._bdims
 
-    def _prefill_into(self, slot: int, req: Request):
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        batch = {"tokens": toks}
-        if self.cfg.rope_kind == "mrope":
-            n = toks.shape[1]
-            pos = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (1, n))
-            batch["positions"] = jnp.broadcast_to(pos[None], (3, 1, n))
-        cache1 = mdl.init_cache(self.cfg, 1, self.max_len)
-        logits, cache1 = self._prefill(self.params, batch, cache1)
-        tok = self._sample(logits, req.temperature)
-        # scatter slot-1 cache into the batched cache at index `slot`
-        def put(big, small):
-            if small.ndim == 0:
-                return small  # pos counter: shared scalar (see note below)
-            bdim = _batch_dim(big, small)
-            if bdim is None:
-                return big
-            idx = [slice(None)] * big.ndim
-            idx[bdim] = slot
-            return big.at[tuple(idx)].set(jnp.take(small, 0, axis=bdim))
-        self.cache = jax.tree.map(put, self.cache, cache1)
-        self.next_tokens[slot] = int(tok[0])
-        # the prefill already produced the first new token
+            def fn(params, cache, tokens, slot):
+                small = _gather_slot(cache, bdims, slot)
+                if fresh:
+                    small = jax.tree.map(jnp.zeros_like, small)
+                batch = {"tokens": tokens}
+                if cfg.rope_kind == "mrope":
+                    start = small["rope_pos"]          # (1,)
+                    pos = (start[:, None]
+                           + jnp.arange(n, dtype=jnp.int32)[None])
+                    batch["positions"] = jnp.broadcast_to(
+                        pos[None], (3, 1, n))
+                logits, small = mdl.prefill(params, cfg, batch, small)
+                return logits, _scatter_slot(cache, small, bdims, slot)
+
+            self._prefill_fns[key] = jax.jit(fn)
+        return self._prefill_fns[key]
+
+    def _windows(self, prompt: list) -> List[list]:
+        w = self.prefill_chunk
+        if w is None or len(prompt) <= w:
+            return [prompt]
+        return [prompt[i:i + w] for i in range(0, len(prompt), w)]
+
+    def _admit_into(self, slot: int, req: Request) -> StepOutput:
+        req.state = RequestState.PREFILLING
+        if req.generated is None:
+            req.generated = []
+        sp = req.resolved_sampling()
+        self._params_of[slot] = sp
+        self._temp[slot] = sp.temperature
+        self._topk[slot] = sp.top_k
+        self._topp[slot] = sp.top_p
+        key = smp.request_key(sp, self.seed, req.rid)
+
+        logits = None
+        for i, window in enumerate(self._windows(req.prompt)):
+            fn = self._prefill_fn(len(window), fresh=(i == 0))
+            logits, self.cache = fn(
+                self.params, self.cache,
+                jnp.asarray(window, jnp.int32)[None],
+                jnp.int32(slot))
+        # the prefill already produced the first new token, sampled with
+        # the request's own params + key (engine v1 greedy'd from here on)
+        toks, key = self._sample1(
+            logits, key[None],
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32))
+        tok = int(toks[0])
+        self._keys[slot] = np.array(key[0])
+        self.next_tokens[slot] = tok
         self.remaining[slot] = req.max_new_tokens - 1
-        req.generated.append(int(tok[0]))
+        req.generated.append(tok)
+        req.state = RequestState.DECODING
+        reason = self._finish_reason(slot, tok, sp)
+        if reason:
+            return self._finish(slot, req, tok, reason)
+        return StepOutput(req.rid, tok, req.state)
 
-    def _sample(self, logits, temperature):
-        if temperature <= 0:
-            return jnp.argmax(logits, axis=-1)
-        self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits / temperature, axis=-1)
-
-    def _step(self, done: dict):
-        # finalize slots already exhausted (or EOS'd) at prefill time
-        for i, req in enumerate(self.slots):
-            if req is not None and (self.remaining[i] <= 0
-                                    or self.next_tokens[i] == self.eos_id):
-                done[req.rid] = req.generated
-                self.slots[i] = None
-        if all(s is None for s in self.slots):
-            return
-        toks = jnp.asarray(self.next_tokens)
-        logits, self.cache = self._decode(self.params, self.cache, toks)
-        nxt = np.array(self._sample(logits, 0.0))  # writable copy
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            tok = int(nxt[i])
+    # -- decode --------------------------------------------------------
+    def _decode_once(self) -> List[StepOutput]:
+        active = list(self.scheduler.active())
+        if not active:
+            return []
+        toks, self.cache, keys = self._decode(
+            self.params, self.cache,
+            jnp.asarray(self.next_tokens),
+            jnp.asarray(self._keys),
+            jnp.asarray(self._temp),
+            jnp.asarray(self._topk),
+            jnp.asarray(self._topp))
+        nxt = np.asarray(toks)
+        self._keys = np.array(keys)  # writable copy
+        outputs = []
+        for slot, req in active:
+            tok = int(nxt[slot])
             req.generated.append(tok)
-            self.remaining[i] -= 1
-            if tok == self.eos_id or self.remaining[i] <= 0:
-                done[req.rid] = req.generated
-                self.slots[i] = None
-        self.next_tokens = nxt
+            self.next_tokens[slot] = tok
+            self.remaining[slot] -= 1
+            reason = self._finish_reason(slot, tok, self._params_of[slot])
+            if reason:
+                outputs.append(self._finish(slot, req, tok, reason))
+            else:
+                outputs.append(StepOutput(req.rid, tok, req.state))
+        return outputs
 
+    # -- lifecycle -----------------------------------------------------
+    def _finish_reason(self, slot: int, tok: int,
+                       sp: smp.SamplingParams) -> Optional[str]:
+        if tok == self.eos_id or tok in sp.stop:
+            return "stop"
+        if self.remaining[slot] <= 0:
+            return "length"
+        return None
 
-def _batch_dim(big, small):
-    """First dim where big.shape[d] != small.shape[d] (the batch dim)."""
-    for d in range(small.ndim):
-        if big.shape[d] != small.shape[d]:
-            return d
-    return None
+    def _finish(self, slot: int, req: Request, tok: int,
+                reason: str) -> StepOutput:
+        req.state = RequestState.FINISHED
+        req.finish_reason = reason
+        self.scheduler.release(slot)
+        self._params_of[slot] = None
+        self._temp[slot] = 0.0  # freed slots decode greedily (masked out)
+        return StepOutput(req.rid, tok, req.state, finished=True,
+                          finish_reason=reason)

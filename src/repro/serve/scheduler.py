@@ -1,0 +1,137 @@
+"""Request lifecycle + admission control for the serving engine.
+
+The paper's serving story is that the linear backend decodes from an
+O(D^2) recurrent state while the softmax baseline drags an O(S) KV
+cache; a fixed `max_slots` admission ignores that difference entirely.
+Admission is therefore a pluggable policy that resolves the slot count
+from the model config:
+
+  FixedSlots(n)   the classic continuous-batching engine: n slots.
+  ByteBudget(b)   admit while the per-slot decode-cache cost (exact,
+                  from serve/cache.py's eval_shape accounting) fits an
+                  HBM byte budget — the budget resolves PER BACKEND
+                  automatically, so at the same budget the linear /
+                  mamba2 backends run orders of magnitude more
+                  concurrent sequences than softmax.
+
+Requests move through a lifecycle the engine surfaces per step:
+
+  QUEUED -> PREFILLING -> DECODING -> FINISHED(finish_reason)
+
+The Scheduler owns the FIFO queue and the slot array; the engine owns
+the jitted compute.  finish_reason is "stop" (eos or a SamplingParams
+stop token) or "length" (max_new_tokens exhausted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Iterator, List, Optional, Tuple
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class StepOutput:
+    """One emitted token (or state transition) of one request."""
+
+    rid: int
+    token: Optional[int]
+    state: RequestState
+    finished: bool = False
+    finish_reason: Optional[str] = None  # "stop" | "length"
+
+
+# ---------------------------------------------------------------------------
+# Admission policies
+# ---------------------------------------------------------------------------
+
+class AdmissionPolicy:
+    """Resolves how many concurrent slots a (cfg, max_len) engine runs."""
+
+    def resolve_slots(self, cfg, max_len: int) -> int:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedSlots(AdmissionPolicy):
+    """Admit up to a fixed number of concurrent sequences."""
+
+    slots: int = 4
+
+    def resolve_slots(self, cfg, max_len: int) -> int:
+        if self.slots < 1:
+            raise ValueError(f"FixedSlots needs >= 1 slot, got {self.slots}")
+        return self.slots
+
+
+@dataclasses.dataclass(frozen=True)
+class ByteBudget(AdmissionPolicy):
+    """Admit while the decode-cache cost fits an HBM byte budget.
+
+    Slot cost is the exact marginal decode-cache bytes of one sequence
+    (serve.cache.per_slot_bytes eval_shapes the backend's own
+    init_cache through the model), so the same budget admits far more
+    O(D^2)-state linear/mamba2 sequences than O(S)-KV softmax ones —
+    the paper's memory story, turned into admission control.
+    """
+
+    budget_bytes: int
+    max_slots: int = 256  # compile-size guard, not a memory limit
+
+    def resolve_slots(self, cfg, max_len: int) -> int:
+        from repro.serve.cache import per_slot_bytes
+        per = per_slot_bytes(cfg, max_len)
+        n = min(self.max_slots, self.budget_bytes // per)
+        if n < 1:
+            raise ValueError(
+                f"byte budget {self.budget_bytes} cannot admit even one "
+                f"sequence: one slot's decode cache at max_len={max_len} "
+                f"is {per} bytes (backend-resolved from cfg)")
+        return int(n)
+
+
+# ---------------------------------------------------------------------------
+# FIFO scheduler
+# ---------------------------------------------------------------------------
+
+class Scheduler:
+    """FIFO admission over a fixed slot array.
+
+    Holds no jax state: slots map indices into the engine's batched
+    cache; the queue drains strictly in submission order as slots free.
+    """
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.queue: deque = deque()
+        self.slots: List[Optional[object]] = [None] * num_slots
+
+    def submit(self, req) -> None:
+        req.state = RequestState.QUEUED
+        self.queue.append(req)
+
+    def admit(self) -> List[Tuple[int, object]]:
+        """Fill free slots from the queue head; returns [(slot, request)]."""
+        admitted = []
+        for i, occupant in enumerate(self.slots):
+            if occupant is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                admitted.append((i, req))
+        return admitted
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = None
+
+    def active(self) -> Iterator[Tuple[int, object]]:
+        return ((i, r) for i, r in enumerate(self.slots) if r is not None)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)

@@ -89,11 +89,40 @@ def test_encdec_requires_cross_capability():
 
 
 def test_kernel_registry_families():
-    for family in ("linear", "softmax"):
+    for family in ("linear", "softmax", "ssd"):
         names = ops.kernel_names(family)
         assert {"xla", "pallas", "pallas_interpret", "ref"} <= set(names)
     with pytest.raises(ValueError, match="registered"):
         ops.get_kernel("linear", "nope")
+
+
+def test_mamba2_validates_against_ssd_family(rng):
+    """cfg.la.backend on a mamba2 config resolves in the "ssd" kernel
+    family (ROADMAP: no more internal dispatch in core/ssd)."""
+    from repro.configs.base import SSMCfg
+    cfg = _cfg(mixer="mamba2", ssm=SSMCfg(state_dim=8, head_dim=8))
+    for impl in ("xla", "pallas_interpret", "ref"):
+        assert get_backend(_with_impl(cfg, impl)).name == "mamba2"
+    with pytest.raises(ValueError) as exc:
+        get_backend(_with_impl(cfg, "cuda"))
+    assert "ssd" in str(exc.value)
+
+
+def test_ssd_impl_parity_through_backend(rng):
+    """All registered ssd impls agree on the mamba2 backend's apply()
+    (grouped q/k included: the ref oracle expands the shared heads)."""
+    from repro.configs.base import SSMCfg
+    cfg = _cfg(mixer="mamba2", ssm=SSMCfg(state_dim=8, head_dim=8,
+                                          expand=2))
+    be = get_backend(cfg)
+    p = be.init(rng, cfg, jnp.float32)
+    x = _x(jax.random.fold_in(rng, 9))
+    outs = {impl: be.apply(p, _with_impl(cfg, impl), x, _positions())
+            for impl in ("xla", "pallas_interpret", "ref")}
+    for impl in ("pallas_interpret", "ref"):
+        np.testing.assert_allclose(
+            np.asarray(outs[impl]), np.asarray(outs["xla"]),
+            rtol=2e-4, atol=2e-4, err_msg=f"ssd {impl} != xla")
 
 
 # ---------------------------------------------------------------------------
@@ -196,6 +225,87 @@ def test_learnable_coeffs_through_backend(rng):
                                rtol=1e-5, atol=1e-5)
     g = jax.grad(lambda p_: jnp.sum(be.apply(p_, lcfg, x, pos) ** 2))(p)
     assert float(jnp.abs(g["la_a"])) > 0
+
+
+@pytest.mark.parametrize("backend_name,window",
+                         [("linear", 6), ("softmax", 6), ("mla", 6),
+                          ("mamba2", 6), ("mamba2", 2), ("softmax", 2)])
+def test_windowed_prefill_matches_oneshot(backend_name, window, rng):
+    """Feeding the prompt window-by-window through prefill must match
+    one-shot prefill for every backend — softmax via continuation
+    prefill (each window attends to the cached prefix), mamba2 even for
+    windows shorter than its conv width."""
+    kw = {}
+    if backend_name in ("linear", "softmax"):
+        kw["attention_backend"] = backend_name
+    elif backend_name == "mla":
+        from repro.configs.base import MLACfg
+        kw.update(mixer="mla",
+                  mla=MLACfg(kv_lora_rank=16, q_lora_rank=16,
+                             rope_head_dim=4, nope_head_dim=8,
+                             v_head_dim=8))
+    else:
+        from repro.configs.base import SSMCfg
+        kw.update(mixer="mamba2",
+                  ssm=SSMCfg(state_dim=8, head_dim=8, expand=2))
+    cfg = _cfg(**kw)
+    be = get_backend(cfg)
+    p = be.init(rng, cfg, jnp.float32)
+    x, pos = _x(jax.random.fold_in(rng, 8)), _positions()
+
+    one = be.init_cache(cfg, B, N + 8, jnp.float32)
+    y_one, one = be.prefill(p, cfg, x, pos, one)
+
+    chunked = be.init_cache(cfg, B, N + 8, jnp.float32)
+    ys = []
+    for s in range(0, N, window):
+        e = min(s + window, N)
+        y_w, chunked = be.prefill(p, cfg, x[:, s:e], pos[:, s:e], chunked)
+        ys.append(y_w)
+    y_chunked = jnp.concatenate(ys, axis=1)
+
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_one),
+                               rtol=2e-4, atol=2e-4)
+    for a, b_ in zip(jax.tree.leaves(one), jax.tree.leaves(chunked)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_softmax_continuation_prefill_per_slot_offsets(rng):
+    """Two slots whose windows sit at DIFFERENT absolute offsets must
+    each attend to exactly their own cached prefix (per-slot q_offset)."""
+    cfg = _cfg(attention_backend="softmax")
+    be = get_backend(cfg)
+    p = be.init(rng, cfg, jnp.float32)
+    n_a, n_b, w = 12, 5, 6
+    xs = _x(jax.random.fold_in(rng, 7), n=n_a + w)
+
+    def alone(n_ctx):
+        cache = be.init_cache(cfg, B, 32, jnp.float32)
+        _, cache = be.prefill(p, cfg, xs[:, :n_ctx], _positions(n_ctx),
+                              cache)
+        pos = (jnp.arange(n_ctx, n_ctx + w, dtype=jnp.int32)[None]
+               + jnp.zeros((B, 1), jnp.int32))
+        y, _ = be.prefill(p, cfg, xs[:, n_ctx:n_ctx + w], pos, cache)
+        return y
+
+    y_a, y_b = alone(n_a), alone(n_b)
+
+    cache_a = be.init_cache(cfg, B, 32, jnp.float32)
+    _, cache_a = be.prefill(p, cfg, xs[:, :n_a], _positions(n_a), cache_a)
+    cache_b = be.init_cache(cfg, B, 32, jnp.float32)
+    _, cache_b = be.prefill(p, cfg, xs[:, :n_b], _positions(n_b), cache_b)
+    mixed = jax.tree.map(lambda a, b_: jnp.stack([a[0], b_[1]]),
+                         cache_a, cache_b)
+    x_w = jnp.stack([xs[0, n_a:n_a + w], xs[1, n_b:n_b + w]])
+    pos = jnp.stack([jnp.arange(n_a, n_a + w), jnp.arange(n_b, n_b + w)]
+                    ).astype(jnp.int32)
+    y, _ = be.prefill(p, cfg, x_w, pos, mixed)
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(y_a[0]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y[1]), np.asarray(y_b[1]),
+                               rtol=1e-4, atol=1e-4)
 
 
 # ---------------------------------------------------------------------------

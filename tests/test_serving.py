@@ -1,6 +1,10 @@
 """Serving correctness: prefill + decode == teacher-forced forward for
 every architecture; the continuous-batching engine matches sequential
-generation; cache sizes honor the paper's O(D^2) story."""
+generation; per-request sampling is honored during decode; ByteBudget
+admission scales with the backend; cache sizes honor the paper's O(D^2)
+story."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,8 +14,10 @@ from repro.configs.registry import ARCHS, get_config
 from repro.models import model as mdl
 from repro.models.frontends import vision_positions_stub
 from repro.serve.cache import cache_bytes, kv_cache_bytes_analytic, \
-    la_state_bytes_analytic
+    la_state_bytes_analytic, per_slot_bytes
 from repro.serve.engine import Engine, Request
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import ByteBudget, FixedSlots, RequestState
 
 B, N = 2, 17
 
@@ -107,14 +113,20 @@ def test_engine_refills_slots(rng):
     assert all(len(v) == 3 for v in done.values())
 
 
-@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-2.7b", "zamba2-7b",
-                                  "deepseek-v2-236b", "qwen2-vl-7b"])
-def test_chunked_prefill_exact(arch, rng):
-    """Windowed (chunked) prefill carrying the recurrent state must give
-    bit-comparable logits AND cache to single-shot prefill."""
+@pytest.mark.parametrize("arch,backend", [
+    ("qwen2.5-3b", "linear"), ("qwen2.5-3b", "softmax"),
+    ("mamba2-2.7b", None), ("zamba2-7b", None),
+    ("deepseek-v2-236b", None), ("qwen2-vl-7b", None)])
+def test_chunked_prefill_exact(arch, backend, rng):
+    """Windowed (chunked) prefill must give bit-comparable logits AND
+    cache to single-shot prefill — for the recurrent-state backends
+    (carried state) AND the softmax baseline (continuation prefill: each
+    window attends to the cached prefix, not just itself)."""
     from repro.models.frontends import vision_positions_stub
     from repro.train.step import build_prefill_step
     cfg = get_config(arch, smoke=True)
+    if backend is not None:
+        cfg = dataclasses.replace(cfg, attention_backend=backend)
     params = mdl.init_params(cfg, rng)
     n, w = 32, 8
     batch = {"tokens": jax.random.randint(rng, (B, n), 0, cfg.vocab_size)}
@@ -128,3 +140,233 @@ def test_chunked_prefill_exact(arch, rng):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b_, np.float32),
                                    rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Serving API v2: chunked prefill, per-request sampling, admission control
+# ---------------------------------------------------------------------------
+
+def _prompts():
+    return [list(range(3, 10)), list(range(5, 17)), list(range(4, 8)),
+            list(range(6, 14)), list(range(3, 12))]
+
+
+@pytest.mark.parametrize("backend", ["linear", "softmax"])
+def test_engine_chunked_prefill_matches_oneshot(backend, rng):
+    """Greedy engine outputs must be identical whether prompts prefill
+    one-shot or window-by-window into the slot's cache region (windows
+    deliberately don't divide the prompt lengths)."""
+    cfg = dataclasses.replace(get_config("qwen2.5-3b", smoke=True),
+                              attention_backend=backend)
+    params = mdl.init_params(cfg, rng)
+
+    def run(prefill_chunk):
+        eng = Engine(cfg, params, max_slots=2, max_len=64, eos_id=-1,
+                     prefill_chunk=prefill_chunk)
+        for rid, p in enumerate(_prompts()):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=6))
+        return eng.run()
+
+    assert run(None) == run(5)
+
+
+def test_decode_honors_temperature(rng):
+    """Regression: engine v1 sampled every post-prefill token with
+    temperature 0.0, silently ignoring the request's temperature.  A
+    hot request under a fixed seed must diverge from greedy, and be
+    reproducible run-to-run."""
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    params = mdl.init_params(cfg, rng)
+    prompt = list(range(3, 11))
+
+    def run():
+        eng = Engine(cfg, params, max_slots=2, max_len=64, eos_id=-1)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+        eng.submit(Request(rid=1, prompt=prompt, max_new_tokens=8,
+                           sampling=SamplingParams(temperature=5.0,
+                                                   seed=7)))
+        return eng.run()
+
+    first, second = run(), run()
+    assert first[0] != first[1], "high-temperature request decoded greedily"
+    assert first == second, "seeded sampling must be reproducible"
+    assert len(first[1]) == 8
+
+
+def test_sampling_independent_of_batch_neighbors(rng):
+    """A seeded request's tokens depend only on its own key — not on
+    which other requests share the batch (per-request PRNG streams)."""
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    params = mdl.init_params(cfg, rng)
+    sp = SamplingParams(temperature=2.0, seed=11)
+
+    def run(extra_hot):
+        eng = Engine(cfg, params, max_slots=2, max_len=64, eos_id=-1)
+        eng.submit(Request(rid=0, prompt=list(range(3, 9)),
+                           max_new_tokens=6, sampling=sp))
+        other = SamplingParams(temperature=3.0, seed=5) if extra_hot \
+            else SamplingParams()
+        eng.submit(Request(rid=1, prompt=list(range(4, 12)),
+                           max_new_tokens=6, sampling=other))
+        return eng.run()
+
+    assert run(False)[0] == run(True)[0]
+
+
+def test_top_k_one_is_greedy(rng):
+    """top_k=1 collapses sampling to argmax even at high temperature."""
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    params = mdl.init_params(cfg, rng)
+    prompt = list(range(3, 11))
+
+    def run(sampling):
+        eng = Engine(cfg, params, max_slots=1, max_len=64, eos_id=-1)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=6,
+                           sampling=sampling))
+        return eng.run()[0]
+
+    greedy = run(SamplingParams())
+    assert run(SamplingParams(temperature=4.0, top_k=1, seed=3)) == greedy
+
+
+def test_finish_reasons_and_stop_tokens(rng):
+    """length / eos / SamplingParams.stop all finish with the right
+    reason, and stop cuts generation short MID-DECODE (seeded sampling
+    gives a reproducible, non-repeating token stream to stop on)."""
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    params = mdl.init_params(cfg, rng)
+    prompt = list(range(3, 11))
+    hot = SamplingParams(temperature=5.0, seed=13)
+
+    def run(eos_id, sampling):
+        eng = Engine(cfg, params, max_slots=1, max_len=64, eos_id=eos_id)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8,
+                           sampling=sampling))
+        return eng.run()[0], eng.request(0)
+
+    full, req = run(-1, hot)
+    assert req.finish_reason == "length"
+    assert req.state is RequestState.FINISHED
+    assert len(full) == 8
+
+    # a token whose FIRST occurrence is after the prefill token, so the
+    # stop fires inside the jitted decode loop, not at admission
+    stop_tok = next(t for t in full[1:] if t != full[0])
+    cut = full.index(stop_tok) + 1
+    assert cut >= 2
+
+    got, req2 = run(stop_tok, hot)            # via eos_id
+    assert got == full[:cut]
+    assert req2.finish_reason == "stop"
+
+    got, req3 = run(-1, dataclasses.replace(hot, stop=(stop_tok,)))
+    assert got == full[:cut]                  # via SamplingParams.stop
+    assert req3.finish_reason == "stop"
+
+
+def test_stream_surfaces_lifecycle(rng):
+    """stream() yields one StepOutput per generated token, transitions
+    end in FINISHED, and matches run()'s results."""
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    params = mdl.init_params(cfg, rng)
+    eng = Engine(cfg, params, max_slots=2, max_len=64, eos_id=-1)
+    for rid, p in enumerate(_prompts()[:3]):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=4))
+    outs = list(eng.stream())
+    by_rid = {}
+    for o in outs:
+        by_rid.setdefault(o.rid, []).append(o)
+    assert sorted(by_rid) == [0, 1, 2]
+    for rid, os_ in by_rid.items():
+        assert [o.finished for o in os_] == [False] * 3 + [True]
+        assert os_[-1].state is RequestState.FINISHED
+        assert os_[-1].finish_reason == "length"
+        assert [o.token for o in os_] == eng.request(rid).generated
+
+
+def test_byte_budget_admission_scales_with_backend(rng):
+    """Acceptance: at the SAME byte budget the linear backend runs
+    strictly more concurrent sequences than softmax, and neither exceeds
+    the budget (verified with serve/cache.cache_bytes)."""
+    max_len = 512
+    cfg_lin = get_config("qwen2.5-3b", smoke=True)
+    cfg_sm = dataclasses.replace(cfg_lin, attention_backend="softmax")
+    budget = 6 * per_slot_bytes(cfg_sm, max_len)   # a handful of KV slots
+    slots = {}
+    for name, cfg in (("linear", cfg_lin), ("softmax", cfg_sm)):
+        policy = ByteBudget(budget)
+        n = policy.resolve_slots(cfg, max_len)
+        marginal = cache_bytes(cfg, n, max_len) - cache_bytes(cfg, 0,
+                                                              max_len)
+        assert marginal <= budget, (name, marginal, budget)
+        slots[name] = n
+    assert slots["linear"] > slots["softmax"], slots
+    # the linear backend's O(D^2) state admits at least an order of
+    # magnitude more sequences (paper Table 1's memory story, as policy)
+    assert slots["linear"] >= 10 * slots["softmax"] \
+        or slots["linear"] == ByteBudget(budget).max_slots
+
+
+def test_byte_budget_engine_runs_and_caps_memory(rng):
+    """An engine under ByteBudget admission completes all requests and
+    its allocated cache stays within the budget."""
+    cfg = dataclasses.replace(get_config("qwen2.5-3b", smoke=True),
+                              attention_backend="softmax")
+    params = mdl.init_params(cfg, rng)
+    budget = 3 * per_slot_bytes(cfg, 64) + per_slot_bytes(cfg, 64) // 2
+    eng = Engine(cfg, params, max_len=64, eos_id=-1,
+                 policy=ByteBudget(budget))
+    assert eng.num_slots == 3
+    assert cache_bytes(cfg, eng.num_slots, 64) - cache_bytes(cfg, 0, 64) \
+        <= budget
+    for rid, p in enumerate(_prompts()):
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=3))
+    done = eng.run()
+    assert sorted(done) == [0, 1, 2, 3, 4]
+
+
+def test_byte_budget_rejects_impossible_budget():
+    cfg = dataclasses.replace(get_config("qwen2.5-3b", smoke=True),
+                              attention_backend="softmax")
+    with pytest.raises(ValueError, match="cannot admit"):
+        ByteBudget(budget_bytes=16).resolve_slots(cfg, 512)
+
+
+def test_top_p_zero_keeps_top1():
+    """top_p=0 must degenerate to argmax, never to an all--inf row."""
+    from repro.serve.sampling import sample
+    logits = jnp.asarray([[1.0, 5.0, 2.0, 0.5]])
+    keys = jnp.asarray(np.stack([np.asarray(jax.random.PRNGKey(0))]))
+    toks, _ = sample(logits, keys, jnp.asarray([2.0]),
+                     jnp.asarray([0], jnp.int32), jnp.asarray([0.0]))
+    assert int(toks[0]) == 1
+
+
+def test_submit_rejects_requests_beyond_max_len(rng):
+    """A prompt + generation that cannot fit the engine's cache is
+    rejected at submit, not silently corrupted at the cache tail."""
+    cfg = dataclasses.replace(get_config("qwen2.5-3b", smoke=True),
+                              attention_backend="softmax")
+    params = mdl.init_params(cfg, rng)
+    eng = Engine(cfg, params, max_slots=1, max_len=16, eos_id=-1,
+                 prefill_chunk=8)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(rid=0, prompt=list(range(3, 27)),
+                           max_new_tokens=4))
+    eng.submit(Request(rid=1, prompt=list(range(3, 15)),
+                       max_new_tokens=5))  # 12 + 5 - 1 = 16 fits exactly
+    assert len(eng.run()[1]) == 5
+
+
+def test_fifo_drain_order(rng):
+    """Queued requests drain in FIFO order as slots free: with one slot
+    and equal-length work, finish order == submission order."""
+    cfg = get_config("qwen2.5-3b", smoke=True)
+    params = mdl.init_params(cfg, rng)
+    eng = Engine(cfg, params, max_len=64, eos_id=-1,
+                 policy=FixedSlots(1))
+    for rid in range(4):
+        eng.submit(Request(rid=rid, prompt=[3 + rid, 4, 5],
+                           max_new_tokens=2))
+    finish_order = [o.rid for o in eng.stream() if o.finished]
+    assert finish_order == [0, 1, 2, 3]
