@@ -3,7 +3,11 @@
 This is the Regular-Attention baseline the paper compares against: the
 lax.scan analogue of FlashAttention-2, O(N) memory on any backend.  The
 Pallas TPU twin lives in `kernels.flash_attention`; both are registered
-as `KernelImpl` entries of the "softmax" family in `kernels.ops`.
+as `KernelImpl` entries of the "softmax" family in `kernels.ops`, and
+both cover the full feature set — GQA without KV expansion, training
+(autodiff through the scan here, flash v2's custom vjp there) and the
+per-slot `q_offset` continuation-prefill mask below (scalar prefetch in
+the flash kernel) — so impl choice is purely an execution decision.
 """
 from __future__ import annotations
 

@@ -1,13 +1,47 @@
-"""Pallas TPU kernel — causal flash attention forward (baseline).
+"""Pallas TPU flash-attention subsystem — the softmax baseline's kernels.
 
-The paper benchmarks against FlashAttention-2 (Dao, 2024); this is the
-TPU analogue used by the benchmark harness: online-softmax with running
-max/sum in VMEM scratch, grid (B, H, N/Cq, N/Ck), KV blocks streamed and
-skipped above the causal diagonal.
+The paper benchmarks against FlashAttention-2 (Dao, 2024); this module is
+the TPU analogue used by the softmax `KernelImpl` family in
+`kernels.ops`, and (since flash v2) a full forward+backward subsystem
+rather than a forward-only benchmark artifact:
+
+forward  `flash_attention_pallas`
+  * online softmax with running max/sum in VMEM scratch, grid
+    (B, H, Nq/Cq, Nk/Ck), KV blocks streamed along the sequential axis;
+  * GQA-NATIVE: the KV BlockSpecs index by `head // group`, so grouped
+    queries share one streamed KV block — no H/Hkv-fold KV copy is ever
+    materialized (memory traffic matches the (B, Hkv, N, D) inputs);
+  * per-slot continuation offsets: `q_offset` (B,) rides in via scalar
+    prefetch; query row i of slot b sits at global position
+    q_offset[b] + i and attends to its whole cached prefix.  KV blocks
+    past a slot's causal frontier are clamped to the frontier block in
+    the index map — the pipeline re-fetches nothing for them — and their
+    compute is skipped, so the KV walk is bounded at the deepest slot's
+    frontier instead of the cache length;
+  * returns the per-row logsumexp when asked (`return_lse`), the only
+    residual the backward needs beyond (q, k, v, o);
+  * fully-masked (padded) query rows finalize through a guarded divide:
+    `acc / max(l, eps)` never produces NaN before the pad-slice.
+
+backward `flash_attention_bwd_pallas` (GLA-style recomputation, Yang et
+al. 2024: store O(N) residuals, recompute probabilities per block)
+  * delta precompute kernel: delta_i = sum_d dO_id * O_id;
+  * dq kernel over the causal-trimmed (B, H, Tq, Tk) grid, KV blocks
+    beyond the diagonal clamped + skipped;
+  * dk/dv kernel over (B, Hkv, Tk, Tq) with the group's query heads
+    folded into the row axis — grads land directly on the (B, Hkv, N, D)
+    KV tensors, again with no head-expansion copy.
+
+The custom-vjp wiring that makes `softmax x pallas` trainable lives in
+`kernels.ops` (one place for every family), not here.
+
+Validated against kernels/ref.py and core/softmax.py in interpret mode
+(this container is CPU-only; TPU is the lowering target).
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -23,10 +57,24 @@ F32 = jnp.float32
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  scale: float, blocks_k: int):
+def _pad_seq(x, n_pad):
+    if x.shape[2] == n_pad:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[2] = (0, n_pad - x.shape[2])
+    return jnp.pad(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                acc_ref, m_ref, l_ref, *, scale: float, blocks_k: int):
+    bi = pl.program_id(0)
     tq = pl.program_id(2)
     tk = pl.program_id(3)
+    off = off_ref[bi]
 
     @pl.when(tk == 0)
     def _init():
@@ -37,14 +85,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     cq = q_ref.shape[2]
     ck = k_ref.shape[2]
 
-    @pl.when(tk * ck < (tq + 1) * cq)  # KV block intersects causal triangle
+    # KV block intersects some query's causal window: its first key
+    # column tk*ck must not lie beyond the block's deepest query row,
+    # which sits at global position off + (tq+1)*cq - 1.
+    @pl.when(tk * ck <= off + (tq + 1) * cq - 1)
     def _step():
         q = q_ref[0, 0].astype(F32)
         k = k_ref[0, 0].astype(F32)
         v = v_ref[0, 0].astype(F32)
         s = scale * jnp.dot(q, k.T, preferred_element_type=F32)
-        # global causal mask: row tq*cq+i attends to col tk*ck+j iff >=
-        ii = tq * cq + lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+        # causal mask at global positions: query row i of this block is
+        # position off + tq*cq + i, key column j is position tk*ck + j
+        ii = off + tq * cq + lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
         jj = tk * ck + lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
         s = jnp.where(ii >= jj, s, NEG_INF)
 
@@ -59,43 +111,290 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
     @pl.when(tk == blocks_k - 1)
     def _finalize():
-        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+        # guard: a fully-masked (padded) query row accumulates l == 0;
+        # dividing by it would put NaN in the rows the caller slices off
+        l = l_ref[...]
+        l_safe = jnp.where(l <= 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_ref[...] + jnp.log(l_safe))[:, 0]
 
 
 def flash_attention_pallas(q, k, v, scale: float | None = None,
                            block_q: int = 128, block_k: int = 128,
-                           interpret: bool = False):
-    """Causal softmax attention.  q,k,v: (B,H,N,D) (KV heads pre-expanded)."""
-    bsz, h, n, d = q.shape
-    scale = (1.0 / d**0.5) if scale is None else scale
-    cq, ck = min(block_q, n), min(block_k, n)
-    n_pad = -(-n // max(cq, ck)) * max(cq, ck)
-    if n_pad != n:
-        w = [(0, 0), (0, 0), (0, n_pad - n), (0, 0)]
-        # padded keys fall outside every real row's causal window (j > i),
-        # so they are masked to -inf; padded query rows are sliced away.
-        q, k, v = jnp.pad(q, w), jnp.pad(k, w), jnp.pad(v, w)
-    tq, tk = n_pad // cq, n_pad // ck
+                           interpret: bool = False, q_offset=None,
+                           return_lse: bool = False):
+    """Causal flash attention, GQA-native.
 
-    out = pl.pallas_call(
-        functools.partial(_flash_kernel, scale=scale, blocks_k=tk),
+    q: (B, H, Nq, D); k, v: (B, Hkv, Nk, D) with Hkv | H — KV heads are
+    read through a `head // group` BlockSpec index, never expanded.
+
+    q_offset: optional (B,) int32 — per-sequence global position of
+    query row 0 (serving continuation prefill against a populated KV
+    cache).  None keeps the training convention (query i is global
+    position i + Nk - Nq, shared across the batch).
+
+    Returns o (B, H, Nq, D), plus the f32 logsumexp (B, H, Nq) when
+    `return_lse` (the backward's residual).
+    """
+    bsz, h, nq, d = q.shape
+    hkv, nk = k.shape[1], k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    scale = (1.0 / d**0.5) if scale is None else scale
+    cq, ck = min(block_q, nq), min(block_k, nk)
+    nq_pad = -(-nq // cq) * cq
+    nk_pad = -(-nk // ck) * ck
+    # padded keys land beyond every slot's causal frontier (the engine
+    # guarantees q_offset + Nq <= Nk), so the global mask drops them;
+    # padded query rows are sliced away after the guarded finalize.
+    q = _pad_seq(q, nq_pad)
+    k, v = _pad_seq(k, nk_pad), _pad_seq(v, nk_pad)
+    tq, tk = nq_pad // cq, nk_pad // ck
+    if q_offset is None:
+        q_offset = jnp.full((bsz,), nk - nq, jnp.int32)
+    q_offset = q_offset.astype(jnp.int32)
+
+    def kv_index(bi, hi, qi, ki, off):
+        # clamp to the slot's causal frontier block: iterations past it
+        # keep the same block index, so the pipeline issues no new DMA
+        frontier = (off[bi] + (qi + 1) * cq - 1) // ck
+        return (bi, hi // group, jnp.minimum(ki, frontier), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(bsz, h, tq, tk),
         in_specs=[
-            pl.BlockSpec((1, 1, cq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
-            pl.BlockSpec((1, 1, ck, d), lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
-            pl.BlockSpec((1, 1, ck, d), lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, cq, d),
+                         lambda bi, hi, qi, ki, off: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, ck, d), kv_index),
+            pl.BlockSpec((1, 1, ck, d), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, 1, cq, d),
-                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((bsz, h, n_pad, d), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, cq, d),
+                         lambda bi, hi, qi, ki, off: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, cq),
+                         lambda bi, hi, qi, ki, off: (bi, hi, qi)),
+        ],
         scratch_shapes=[
             pltpu.VMEM((cq, d), F32),
             pltpu.VMEM((cq, 1), F32),
             pltpu.VMEM((cq, 1), F32),
         ],
+    )
+    o, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale, blocks_k=tk),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, nq_pad, d), q.dtype),
+            jax.ShapeDtypeStruct((bsz, h, nq_pad), F32),
+        ],
         compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(q, k, v)
-    return out[:, :, :n]
+    )(q_offset, q, k, v)
+    o, lse = o[:, :, :nq], lse[:, :, :nq]
+    return (o, lse) if return_lse else o
+
+
+# ---------------------------------------------------------------------------
+# Backward — delta precompute
+# ---------------------------------------------------------------------------
+
+def _delta_kernel(o_ref, do_ref, delta_ref):
+    o = o_ref[0, 0].astype(F32)
+    do = do_ref[0, 0].astype(F32)
+    delta_ref[0, 0] = jnp.sum(o * do, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Backward — dq (recompute P per KV block, causal-trimmed grid)
+# ---------------------------------------------------------------------------
+
+def _bwd_q_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                  dq_ref, acc_ref, *, scale: float, blocks_k: int):
+    tq = pl.program_id(2)
+    tk = pl.program_id(3)
+
+    @pl.when(tk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cq = q_ref.shape[2]
+    ck = k_ref.shape[2]
+
+    @pl.when(tk * ck < (tq + 1) * cq)  # KV block intersects the triangle
+    def _step():
+        q = q_ref[0, 0].astype(F32)
+        k = k_ref[0, 0].astype(F32)
+        v = v_ref[0, 0].astype(F32)
+        do = do_ref[0, 0].astype(F32)
+        lse = lse_ref[0, 0].astype(F32)
+        delta = delta_ref[0, 0].astype(F32)
+        s = scale * jnp.dot(q, k.T, preferred_element_type=F32)
+        ii = tq * cq + lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+        jj = tk * ck + lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+        p = jnp.where(ii >= jj, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jnp.dot(do, v.T, preferred_element_type=F32)
+        ds = p * (dp - delta[:, None])
+        acc_ref[...] += jnp.dot(ds, k, preferred_element_type=F32)
+
+    @pl.when(tk == blocks_k - 1)
+    def _finalize():
+        dq_ref[0, 0] = (scale * acc_ref[...]).astype(dq_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backward — dk/dv (group's query heads folded into the row axis)
+# ---------------------------------------------------------------------------
+
+def _bwd_kv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
+                   blocks_q: int):
+    tk = pl.program_id(2)
+    tq = pl.program_id(3)
+
+    @pl.when(tq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    g, cq, d = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    ck = k_ref.shape[2]
+
+    @pl.when((tq + 1) * cq > tk * ck)  # q block reaches the KV block
+    def _step():
+        q = q_ref[0].astype(F32).reshape(g * cq, d)
+        do = do_ref[0].astype(F32).reshape(g * cq, d)
+        lse = lse_ref[0].astype(F32).reshape(g * cq, 1)
+        delta = delta_ref[0].astype(F32).reshape(g * cq, 1)
+        k = k_ref[0, 0].astype(F32)
+        v = v_ref[0, 0].astype(F32)
+        s = scale * jnp.dot(q, k.T, preferred_element_type=F32)
+        # row r of the folded (g*cq) axis is local query row r % cq
+        ii = tq * cq + (lax.broadcasted_iota(jnp.int32, (g * cq, ck), 0)
+                        % cq)
+        jj = tk * ck + lax.broadcasted_iota(jnp.int32, (g * cq, ck), 1)
+        p = jnp.where(ii >= jj, jnp.exp(s - lse), 0.0)
+        dv_acc[...] += jnp.dot(p.T, do, preferred_element_type=F32)
+        dp = jnp.dot(do, v.T, preferred_element_type=F32)
+        ds = p * (dp - delta)
+        dk_acc[...] += jnp.dot(ds.T, q, preferred_element_type=F32)
+
+    @pl.when(tq == blocks_q - 1)
+    def _finalize():
+        dk_ref[0, 0] = (scale * dk_acc[...]).astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd_pallas(q, k, v, o, lse, do,
+                               scale: float | None = None,
+                               block_q: int = 128, block_k: int = 128,
+                               interpret: bool = False):
+    """Recomputation-based flash backward from residuals {q, k, v, o, lse}.
+
+    Training path only (self-attention, Nq == Nk, no q_offset).  Returns
+    (dq, dk, dv) with dk/dv in the UNEXPANDED (B, Hkv, N, D) layout —
+    the group's query-head contributions are summed inside the kernel.
+    """
+    bsz, h, n, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    scale = (1.0 / d**0.5) if scale is None else scale
+    cq, ck = min(block_q, n), min(block_k, n)
+    # both grids tile the SAME padded length, so it must be a common
+    # multiple of both block sizes — flooring n_pad // ck with unequal
+    # blocks would silently drop whole KV blocks from the gradient
+    lcm = cq * ck // math.gcd(cq, ck)
+    n_pad = -(-n // lcm) * lcm
+    tq, tk = n_pad // cq, n_pad // ck
+
+    q, k, v, o, do = (_pad_seq(x, n_pad) for x in (q, k, v, o, do))
+    # padded rows carry do == 0, so any p they recompute contributes 0
+    lse = _pad_seq(lse[..., None], n_pad)[..., 0]
+
+    delta = pl.pallas_call(
+        _delta_kernel,
+        grid=(bsz, h, tq),
+        in_specs=[
+            pl.BlockSpec((1, 1, cq, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, cq, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cq),
+                               lambda bi, hi, qi: (bi, hi, qi)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, n_pad), F32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(o, do)
+
+    def kv_trim(bi, hi, qi, ki):
+        # blocks above the diagonal re-use the diagonal block (no DMA)
+        return (bi, hi // group, jnp.minimum(ki, ((qi + 1) * cq - 1) // ck),
+                0)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_q_kernel, scale=scale, blocks_k=tk),
+        grid=(bsz, h, tq, tk),
+        in_specs=[
+            pl.BlockSpec((1, 1, cq, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, ck, d), kv_trim),
+            pl.BlockSpec((1, 1, ck, d), kv_trim),
+            pl.BlockSpec((1, 1, cq, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, cq),
+                         lambda bi, hi, qi, ki: (bi, hi, qi)),
+            pl.BlockSpec((1, 1, cq),
+                         lambda bi, hi, qi, ki: (bi, hi, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, n_pad, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((cq, d), F32)],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    def q_trim(bi, hi, ki, qi):
+        # q blocks strictly above the diagonal contribute nothing: clamp
+        # them to the first contributing block so no DMA is issued
+        return (bi, hi, jnp.maximum(qi, (ki * ck) // cq), 0)
+
+    def q_trim_vec(bi, hi, ki, qi):
+        return (bi, hi, jnp.maximum(qi, (ki * ck) // cq))
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_kv_kernel, scale=scale, blocks_q=tq),
+        grid=(bsz, hkv, tk, tq),
+        in_specs=[
+            pl.BlockSpec((1, group, cq, d), q_trim),
+            pl.BlockSpec((1, 1, ck, d),
+                         lambda bi, hi, ki, qi: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, ck, d),
+                         lambda bi, hi, ki, qi: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, group, cq, d), q_trim),
+            pl.BlockSpec((1, group, cq), q_trim_vec),
+            pl.BlockSpec((1, group, cq), q_trim_vec),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, ck, d),
+                         lambda bi, hi, ki, qi: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, ck, d),
+                         lambda bi, hi, ki, qi: (bi, hi, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, hkv, n_pad, d), k.dtype),
+            jax.ShapeDtypeStruct((bsz, hkv, n_pad, d), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((ck, d), F32),
+                        pltpu.VMEM((ck, d), F32)],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    return dq[:, :, :n], dk[:, :, :n], dv[:, :, :n]

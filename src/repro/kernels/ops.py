@@ -18,7 +18,11 @@ actionable error listing the registered impls for unknown names.
 The causal linear path is wrapped in jax.custom_vjp implementing the
 paper's analytic backward (Eqs. 19-21): residuals are {q, k, v, o, g} —
 O(N D) memory — instead of the O(N D^2) intermediates autodiff would
-store.  The custom-vjp wiring lives here, once, regardless of impl.
+store.  The causal softmax path gets the same treatment (flash v2):
+residuals {q, k, v, o, lse} with a recomputation-based flash backward,
+so the FlashAttention-2-style baseline trains through pallas exactly
+like the paper's kernel does.  The custom-vjp wiring lives here, once,
+regardless of impl.
 """
 from __future__ import annotations
 
@@ -38,7 +42,7 @@ from repro.kernels import ref as _ref
 __all__ = [
     "KernelImpl", "register_kernel", "get_kernel", "kernel_names",
     "la_causal", "la_causal_learnable", "la_prefill", "la_noncausal",
-    "la_decode_step", "softmax_attention", "ssd_causal",
+    "la_decode_step", "softmax_attention", "softmax_causal", "ssd_causal",
     "LAState", "init_state", "default_backend", "DEFAULT_CHUNK",
 ]
 
@@ -64,23 +68,31 @@ class KernelImpl:
          softmax family: (q, k, v, causal, chunk, q_offset) -> o
          ssd family:     (q, k, v, log_decay, chunk) -> o
     bwd: linear family: (q, k, v, o, g, omega, a, b, chunk) ->
-         (dq, dk, dv); ssd family: (q, k, v, log_decay, o, omega, chunk)
-         -> (dq, dk, dv, dlog_decay).  None means "fall back to the xla
-         backward" (the oracles have no analytic backward, softmax uses
-         autodiff).
+         (dq, dk, dv); softmax family: (q, k, v, o, lse, omega, chunk)
+         -> (dq, dk, dv); ssd family: (q, k, v, log_decay, o, omega,
+         chunk) -> (dq, dk, dv, dlog_decay).  None means "fall back" —
+         to the xla backward for linear/ssd, to autodiff for softmax
+         (the oracles have no analytic backward).
+    fwd_res: softmax family only: (q, k, v, chunk) -> (o, lse), the
+         causal forward that also returns the logsumexp residual the
+         paired bwd recomputes probabilities from.  Required whenever
+         bwd is set on a softmax impl.
     """
 
     family: str
     name: str
     fwd: Callable
     bwd: Optional[Callable] = None
+    fwd_res: Optional[Callable] = None
 
 
 _KERNELS: dict[tuple[str, str], KernelImpl] = {}
 
 
-def register_kernel(family: str, name: str, *, fwd, bwd=None) -> KernelImpl:
-    impl = KernelImpl(family=family, name=name, fwd=fwd, bwd=bwd)
+def register_kernel(family: str, name: str, *, fwd, bwd=None,
+                    fwd_res=None) -> KernelImpl:
+    impl = KernelImpl(family=family, name=name, fwd=fwd, bwd=bwd,
+                      fwd_res=fwd_res)
     _KERNELS[(family, name)] = impl
     return impl
 
@@ -125,13 +137,15 @@ def _linear_pallas_bwd(interpret):
 
 def _linear_ref_fwd(q, k, v, a, b, chunk):
     o = _ref.la_ref(q, k, v, a, b, causal=True)
-    # oracle recomputes g for residuals
-    kk = _ref.expand_kv(k, q.shape[1]).astype(jnp.float32)
-    s = jnp.einsum("bhid,bhjd->bhij", q.astype(jnp.float32), kk)
+    # oracle recomputes g for residuals — grouped einsum over a
+    # (b, hkv, g, ...) view of q, no KV head expansion
+    bq, h, n, d = q.shape
+    hkv = k.shape[1]
+    qg = q.reshape(bq, hkv, h // hkv, n, d).astype(jnp.float32)
+    s = jnp.einsum("bkgid,bkjd->bkgij", qg, k.astype(jnp.float32))
     w = a + b * s
-    n = q.shape[2]
     w = jnp.where(jnp.tril(jnp.ones((n, n), bool)), w, 0.0)
-    return o, w.sum(-1)
+    return o, w.sum(-1).reshape(bq, h, n)
 
 
 register_kernel("linear", "xla", fwd=_linear_xla_fwd,
@@ -155,18 +169,33 @@ def _softmax_xla_fwd(q, k, v, causal, chunk, q_offset=None):
 def _softmax_pallas_fwd(interpret):
     def fwd(q, k, v, causal, chunk, q_offset=None):
         from repro.kernels import flash_attention as _fl
-        if not causal or q_offset is not None:
-            # the flash kernel is causal-only and knows no per-sequence
-            # offsets (serving continuation prefill); stream chunks
-            return _softmax.softmax_chunked(q, k, v, causal=causal,
-                                            chunk=chunk, q_offset=q_offset)
-        # the flash kernel doesn't understand GQA yet: this materializes
-        # the H/Hkv-fold KV copy in HBM (ROADMAP: index the KV BlockSpec
-        # by head//group instead)
-        k = _ref.expand_kv(k, q.shape[1])
-        v = _ref.expand_kv(v, q.shape[1])
-        return _fl.flash_attention_pallas(q, k, v, interpret=interpret)
+        if not causal:
+            # noncausal (encoder / cross) stays on the XLA scan; the
+            # flash grid is causal-trimmed by construction
+            return _softmax.softmax_chunked(q, k, v, causal=False,
+                                            chunk=chunk)
+        # GQA-native and q_offset-native: KV BlockSpecs index by
+        # head // group (no H/Hkv-fold copy), per-slot offsets stream in
+        # via scalar prefetch (serving continuation prefill)
+        return _fl.flash_attention_pallas(q, k, v, q_offset=q_offset,
+                                          interpret=interpret)
     return fwd
+
+
+def _softmax_pallas_fwd_res(interpret):
+    def fwd_res(q, k, v, chunk):
+        from repro.kernels import flash_attention as _fl
+        return _fl.flash_attention_pallas(q, k, v, interpret=interpret,
+                                          return_lse=True)
+    return fwd_res
+
+
+def _softmax_pallas_bwd(interpret):
+    def bwd(q, k, v, o, lse, omega, chunk):
+        from repro.kernels import flash_attention as _fl
+        return _fl.flash_attention_bwd_pallas(q, k, v, o, lse, omega,
+                                              interpret=interpret)
+    return bwd
 
 
 def _softmax_ref_fwd(q, k, v, causal, chunk, q_offset=None):
@@ -177,9 +206,47 @@ def _softmax_ref_fwd(q, k, v, causal, chunk, q_offset=None):
 
 
 register_kernel("softmax", "xla", fwd=_softmax_xla_fwd)
-register_kernel("softmax", "pallas", fwd=_softmax_pallas_fwd(False))
-register_kernel("softmax", "pallas_interpret", fwd=_softmax_pallas_fwd(True))
+register_kernel("softmax", "pallas", fwd=_softmax_pallas_fwd(False),
+                bwd=_softmax_pallas_bwd(False),
+                fwd_res=_softmax_pallas_fwd_res(False))
+register_kernel("softmax", "pallas_interpret", fwd=_softmax_pallas_fwd(True),
+                bwd=_softmax_pallas_bwd(True),
+                fwd_res=_softmax_pallas_fwd_res(True))
 register_kernel("softmax", "ref", fwd=_softmax_ref_fwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def softmax_causal(q, k, v, chunk: int = DEFAULT_CHUNK,
+                   backend: str = "auto"):
+    """Causal softmax attention with the flash custom vjp (training entry).
+
+    Residuals are {q, k, v, o, lse} — O(N D) like the linear family —
+    and the backward recomputes per-block probabilities (delta
+    precompute, then dq and dk/dv over the causal-trimmed grid).  Only
+    reachable for impls that registered a bwd; `softmax_attention`
+    routes everything else through autodiff-safe fwd paths.
+    """
+    return get_kernel("softmax", backend).fwd(q, k, v, True, chunk, None)
+
+
+def _softmax_causal_fwd(q, k, v, chunk, backend):
+    impl = get_kernel("softmax", backend)
+    if impl.fwd_res is None or impl.bwd is None:
+        raise ValueError(
+            f"softmax kernel impl {impl.name!r} has no custom backward "
+            f"(fwd_res/bwd); differentiate through softmax_attention — "
+            f"it falls back to autodiff for such impls — or pick one of "
+            f"{[n for (f, n), i in _KERNELS.items() if f == 'softmax' and i.bwd is not None]}")
+    o, lse = impl.fwd_res(q, k, v, chunk)
+    return o, (q, k, v, o, lse)
+
+
+def _softmax_causal_bwd(chunk, backend, res, omega):
+    q, k, v, o, lse = res
+    return get_kernel("softmax", backend).bwd(q, k, v, o, lse, omega, chunk)
+
+
+softmax_causal.defvjp(_softmax_causal_fwd, _softmax_causal_bwd)
 
 
 def softmax_attention(q, k, v, *, causal: bool = True,
@@ -187,13 +254,20 @@ def softmax_attention(q, k, v, *, causal: bool = True,
                       q_offset=None):
     """Softmax-baseline attention through the registry.
 
-    q: (B, H, N, D); k, v: (B, Hkv, N, D), Hkv | H.  Autodiff-safe (the
-    chunked scan recomputes per-chunk probabilities in the backward).
+    q: (B, H, N, D); k, v: (B, Hkv, N, D), Hkv | H.  Differentiable on
+    every impl: the xla scan recomputes per-chunk probabilities under
+    autodiff, the pallas impls train through `softmax_causal`'s custom
+    vjp (flash forward + recomputation-based flash backward).
     q_offset: optional (B,) global position of query 0 per sequence
-    (serving continuation prefill against a populated KV cache).
+    (serving continuation prefill against a populated KV cache) — runs
+    through the flash kernel's scalar-prefetch offset path on the pallas
+    impls, no XLA fallback.
     """
-    return get_kernel("softmax", backend).fwd(q, k, v, causal, chunk,
-                                              q_offset)
+    resolved = default_backend() if backend == "auto" else backend
+    impl = get_kernel("softmax", resolved)
+    if causal and q_offset is None and impl.bwd is not None:
+        return softmax_causal(q, k, v, chunk, resolved)
+    return impl.fwd(q, k, v, causal, chunk, q_offset)
 
 
 # ---------------------------------------------------------------------------
@@ -222,10 +296,8 @@ def _ssd_pallas_bwd(interpret):
 
 
 def _ssd_ref_fwd(q, k, v, log_decay, chunk):
-    # the oracle is ungrouped: expand the shared q/k to per-head copies
-    h = v.shape[1]
-    return _ref.ssd_ref(_ref.expand_kv(q, h), _ref.expand_kv(k, h),
-                        v, log_decay)
+    # the oracle is grouped-native: shared q/k heads stay (B, G, N, Dk)
+    return _ref.ssd_ref(q, k, v, log_decay)
 
 
 register_kernel("ssd", "xla", fwd=_ssd_xla_fwd, bwd=_ssd.ssd_bwd_chunked)

@@ -2,6 +2,11 @@
 
 These materialize the full N x N attention matrix and are used only as
 correctness references in tests and benchmarks.  All accumulation is f32.
+
+The oracles are GROUPED-native: queries are viewed as (B, Hkv, G, N, D)
+and contracted against the unexpanded (B, Hkv, N, D) keys/values, so
+parity tests compare kernels against an oracle that — like the kernels —
+never materializes an H/Hkv-fold KV copy.
 """
 from __future__ import annotations
 
@@ -11,8 +16,8 @@ import jax.numpy as jnp
 def expand_kv(x: jnp.ndarray, num_q_heads: int) -> jnp.ndarray:
     """Repeat KV heads (B, Hkv, N, D) -> (B, H, N, D) for grouped queries.
 
-    Materializes the H/Hkv-fold copy — fine for the oracles here, and
-    used (with a noted cost) by kernels that don't understand GQA yet.
+    Materializes the H/Hkv-fold copy — kept only for tests that want the
+    expanded layout explicitly; the oracles below no longer use it.
     """
     b, hkv, n, d = x.shape
     if hkv == num_q_heads:
@@ -42,19 +47,18 @@ def la_ref(
     reference only.
     """
     out_dtype = q.dtype
-    h = q.shape[1]
-    k = _expand_kv(k, h)
-    v = _expand_kv(v, h)
-    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
-    s = jnp.einsum("bhid,bhjd->bhij", qf, kf)
+    bq, h, nq, d = q.shape
+    hkv, nk = k.shape[1], k.shape[2]
+    qg = q.reshape(bq, hkv, h // hkv, nq, d).astype(jnp.float32)
+    kf, vf = (x.astype(jnp.float32) for x in (k, v))
+    s = jnp.einsum("bkgid,bkjd->bkgij", qg, kf)
     w = a + b * s
     if causal:
-        nq, nk = w.shape[-2], w.shape[-1]
         mask = jnp.tril(jnp.ones((nq, nk), dtype=bool), k=nk - nq)
         w = jnp.where(mask, w, 0.0)
     g = w.sum(axis=-1, keepdims=True)
-    o = jnp.einsum("bhij,bhjd->bhid", w, vf) / g
-    return o.astype(out_dtype)
+    o = jnp.einsum("bkgij,bkjd->bkgid", w, vf) / g
+    return o.reshape(bq, h, nq, vf.shape[-1]).astype(out_dtype)
 
 
 def softmax_ref(
@@ -66,20 +70,19 @@ def softmax_ref(
 ) -> jnp.ndarray:
     """Regular softmax attention oracle (paper Eq. 2/3)."""
     out_dtype = q.dtype
-    h, d = q.shape[1], q.shape[-1]
-    k = _expand_kv(k, h)
-    v = _expand_kv(v, h)
-    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    bq, h, nq, d = q.shape
+    hkv, nk = k.shape[1], k.shape[2]
+    qg = q.reshape(bq, hkv, h // hkv, nq, d).astype(jnp.float32)
+    kf, vf = (x.astype(jnp.float32) for x in (k, v))
     scale = (1.0 / d**0.5) if scale is None else scale
-    s = jnp.einsum("bhid,bhjd->bhij", qf, kf) * scale
+    s = jnp.einsum("bkgid,bkjd->bkgij", qg, kf) * scale
     if causal:
-        nq, nk = s.shape[-2], s.shape[-1]
         mask = jnp.tril(jnp.ones((nq, nk), dtype=bool), k=nk - nq)
         s = jnp.where(mask, s, -jnp.inf)
     p = jnp.exp(s - s.max(axis=-1, keepdims=True))
     p = p / p.sum(axis=-1, keepdims=True)
-    o = jnp.einsum("bhij,bhjd->bhid", p, vf)
-    return o.astype(out_dtype)
+    o = jnp.einsum("bkgij,bkjd->bkgid", p, vf)
+    return o.reshape(bq, h, nq, vf.shape[-1]).astype(out_dtype)
 
 
 def ssd_ref(
@@ -94,18 +97,24 @@ def ssd_ref(
         S_t = gamma_t S_{t-1} + k_t v_t^T,   o_t = q_t S_t
     with gamma_t = exp(log_decay_t) in (0, 1].
 
-    q, k: (B, H, N, Dk); v: (B, H, N, Dv); log_decay: (B, H, N) <= 0.
-    Materializes M_in = prod_{m=n+1..i} gamma_m via cumulative log sums.
+    q, k: (B, G, N, Dk) with G | H (shared grouped heads, NOT expanded);
+    v: (B, H, N, Dv); log_decay: (B, H, N) <= 0.  The per-head decay
+    matrix M[i, n] = prod_{m=n+1..i} gamma_m comes from cumulative log
+    sums over a (B, G, H/G, ...) view, the shared q/k scores from one
+    grouped einsum.
     """
     out_dtype = v.dtype
-    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
-    ld = log_decay.astype(jnp.float32)
-    cl = jnp.cumsum(ld, axis=-1)  # (B,H,N) cumulative log decay
+    b, grp, n, _ = q.shape
+    h = v.shape[1]
+    g = h // grp
+    qf, kf = (x.astype(jnp.float32) for x in (q, k))
+    vf = v.astype(jnp.float32).reshape(b, grp, g, n, v.shape[-1])
+    ld = log_decay.astype(jnp.float32).reshape(b, grp, g, n)
+    cl = jnp.cumsum(ld, axis=-1)  # (B,G,g,N) cumulative log decay
     # M[i, n] = exp(cl_i - cl_n) for n <= i else 0
     diff = cl[..., :, None] - cl[..., None, :]
-    n = diff.shape[-1]
     mask = jnp.tril(jnp.ones((n, n), dtype=bool))
     m = jnp.where(mask, jnp.exp(diff), 0.0)
-    s = jnp.einsum("bhid,bhjd->bhij", qf, kf) * m
-    o = jnp.einsum("bhij,bhjd->bhid", s, vf)
-    return o.astype(out_dtype)
+    s = jnp.einsum("bkid,bkjd->bkij", qf, kf)  # shared across the group
+    o = jnp.einsum("bkij,bkgij,bkgjd->bkgid", s, m, vf)
+    return o.reshape(b, h, n, v.shape[-1]).astype(out_dtype)

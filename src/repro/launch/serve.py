@@ -21,6 +21,7 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config
+from repro.kernels import ops as _ops
 from repro.models import model as mdl
 from repro.serve.cache import per_slot_bytes
 from repro.serve.engine import Engine, Request
@@ -33,6 +34,11 @@ def main():
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--backend", default=None,
                     help="override cfg.attention_backend (linear|softmax)")
+    ap.add_argument("--kernel", default=None,
+                    help="kernel impl for the engine "
+                         "(auto|xla|pallas|pallas_interpret); softmax + "
+                         "pallas runs continuation prefill through the "
+                         "flash kernel's q_offset path")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
@@ -58,7 +64,8 @@ def main():
     else:
         policy = FixedSlots(args.slots)
     engine = Engine(cfg, params, max_len=args.max_len, policy=policy,
-                    prefill_chunk=args.prefill_chunk)
+                    prefill_chunk=args.prefill_chunk,
+                    kernel_backend=args.kernel)
 
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p)
@@ -76,6 +83,8 @@ def main():
         "arch": args.arch,
         "backend": cfg.attention_backend if cfg.mixer == "attention"
         else cfg.mixer,
+        "kernel": _ops.default_backend()
+        if engine.cfg.la.backend == "auto" else engine.cfg.la.backend,
         "policy": type(engine.policy).__name__,
         "slots": engine.num_slots,
         "per_slot_bytes": per_slot_bytes(cfg, args.max_len),

@@ -1,9 +1,13 @@
 """Softmax-attention backend — the Regular-Attention baseline.
 
 Scores go through the "softmax" KernelImpl family in kernels.ops:
-cfg.la.backend picks chunked online-softmax (xla — autodiff-safe, the
-training path) or the Pallas flash kernel (pallas / pallas_interpret —
-forward/inference benchmarking).
+cfg.la.backend picks chunked online-softmax (xla) or the Pallas flash
+kernel (pallas / pallas_interpret).  Both TRAIN: the xla scan
+differentiates by autodiff, the flash kernel through the custom-vjp
+registered in kernels.ops (flash v2's recomputation-based backward), so
+"auto" resolving to pallas on TPU gives a trainable baseline.  The
+flash kernel is also GQA-native and understands per-slot q_offset, so
+continuation prefill below runs through Pallas too — no XLA fallback.
 
 Decode keeps an O(S) KVCache per layer and is PER-SLOT position correct:
 each continuously-batched slot scatters its new k/v at its own absolute
@@ -37,17 +41,12 @@ def _scatter_window(big, new, start):
 
 @register_backend("softmax")
 class SoftmaxAttentionBackend(GQAProjectionBackend):
-    @staticmethod
-    def _train_impl(cfg) -> str:
-        # "auto" must NOT resolve to pallas here: the flash kernel has no
-        # vjp, and apply/apply_noncausal are differentiated in training.
-        # An explicit cfg.la.backend="pallas" is honored (fwd-only bench).
-        return "xla" if cfg.la.backend == "auto" else cfg.la.backend
-
     def apply(self, p, cfg, x, positions, compute_dtype=None):
+        # every impl is trainable (flash v2 registered a custom vjp), so
+        # cfg.la.backend flows straight through — "auto" = pallas on TPU
         q, k, v = self.project_qkv(p, cfg, x, positions, compute_dtype)
         o = _ops.softmax_attention(q, k, v, causal=True, chunk=cfg.la.chunk,
-                                   backend=self._train_impl(cfg))
+                                   backend=cfg.la.backend)
         return self.out(p, o, compute_dtype)
 
     def apply_noncausal(self, p, cfg, x, ctx, positions=None,
@@ -56,7 +55,7 @@ class SoftmaxAttentionBackend(GQAProjectionBackend):
                                          compute_dtype)
         o = _ops.softmax_attention(q, k, v, causal=False,
                                    chunk=cfg.la.chunk,
-                                   backend=self._train_impl(cfg))
+                                   backend=cfg.la.backend)
         return self.out(p, o, compute_dtype)
 
     def init_cache(self, cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -71,7 +70,9 @@ class SoftmaxAttentionBackend(GQAProjectionBackend):
         slot's absolute offset, then the window queries attend to the
         whole cached prefix plus themselves (per-slot `q_offset` causal
         mask) — chunked prefill is exact for the baseline too, matching
-        what the recurrent backends get from their carried state."""
+        what the recurrent backends get from their carried state.  On
+        the pallas impls the offsets ride the flash kernel's scalar
+        prefetch (KV walk bounded at the deepest slot's frontier)."""
         q, k, v = self.project_qkv(p, cfg, x, positions, compute_dtype)
         start = _pos2d(positions)[:, 0]
         cache = KVCache(k=_scatter_window(cache.k, k, start),

@@ -26,7 +26,11 @@ scatter back), so admission allocates no throwaway max_len cache and a
 long prompt compiles one window-sized prefill instead of one giant
 prompt-length one.  Windowed prefill is exact for every backend: the
 recurrent mixers carry their state, and the softmax baseline's windows
-attend to the cached prefix (continuation prefill, mixers/softmax.py).
+attend to the cached prefix (continuation prefill, mixers/softmax.py —
+on the pallas kernel impls the per-slot offsets go through the flash
+kernel's scalar-prefetch path, no XLA fallback).  `kernel_backend`
+overrides cfg.la.backend at construction so a serving deployment can
+pick the kernel impl (e.g. "pallas" on TPU) without rebuilding configs.
 """
 from __future__ import annotations
 
@@ -105,11 +109,18 @@ class Engine:
     def __init__(self, cfg, params, *, max_slots: int = 4,
                  max_len: int = 4096, eos_id: int = 2, seed: int = 0,
                  policy: Optional[AdmissionPolicy] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 kernel_backend: Optional[str] = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "the serving engine targets decoder-only families; "
                 "whisper decode needs per-request encoder frames")
+        if kernel_backend is not None:
+            # deployment knob: pick the kernel impl (xla / pallas / ...)
+            # for this engine; get_backend below re-validates the name
+            cfg = dataclasses.replace(
+                cfg, la=dataclasses.replace(cfg.la,
+                                            backend=kernel_backend))
         self.cfg = cfg
         self.backend = get_backend(cfg)  # validates cfg at admission time
         self.params = params
