@@ -21,6 +21,10 @@ paper's scaling claims (slopes) and memory ratios:
                       CPU the compiled-pallas rows are skipped and a
                       small interpret-mode parity cell exercises the
                       kernel instead
+  paged              — decode tokens/s, paged-KV kernel vs the contiguous
+                       per-slot decode, at context N ∈ {1k, 8k}; emits
+                       artifacts/BENCH_paged.json with an interpret-mode
+                       parity cell (CI asserts on it)
   roofline           — prints the 40-cell tables from artifacts/dryrun
 
 Every entry prints `name,metric,value` CSV rows.
@@ -330,6 +334,94 @@ def bench_flash(json_path: str = "artifacts/BENCH_flash.json"):
         raise SystemExit(f"flash interpret parity failed: {err}")
 
 
+def bench_paged(json_path: str = "artifacts/BENCH_paged.json"):
+    """Paged-KV acceptance numbers: one-token decode throughput over a
+    paged cache ("paged" KernelImpl family) vs the contiguous per-slot
+    decode ("softmax_decode"), B=4 slots, GQA (H=8, Hkv=2, D=64), at
+    context N ∈ {1024, 8192}.
+
+    The compiled-pallas cell needs a TPU; on CPU it is recorded as null
+    and an interpret-mode parity cell (paged pallas vs paged xla vs the
+    contiguous decode on the gathered layout) proves the kernel path."""
+    import json
+    import os
+
+    from repro.kernels import ops
+    from repro.kernels.paged_attention import gather_pages
+
+    b, h, hkv, d, ps = 4, 8, 2, 64, 16
+    on_tpu = jax.default_backend() == "tpu"
+    record = {"device": jax.default_backend(),
+              "shape": {"B": b, "H": h, "Hkv": hkv, "D": d,
+                        "page_size": ps},
+              "cells": []}
+
+    def setup(n):
+        pmax = n // ps
+        num_pages = b * pmax + 1
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (b, h, 1, d)) * 0.3
+        k_pages = jax.random.normal(ks[1], (num_pages, hkv, ps, d)) * 0.3
+        v_pages = jax.random.normal(ks[2], (num_pages, hkv, ps, d))
+        # each slot owns pmax consecutive pages (sink page last)
+        pt = jnp.arange(b * pmax, dtype=jnp.int32).reshape(b, pmax)
+        lens = jnp.full((b,), n, jnp.int32)
+        return q, k_pages, v_pages, pt, lens
+
+    for n in (1024, 8192):
+        q, kp, vp, pt, lens = setup(n)
+        kc, vc = gather_pages(kp, pt), gather_pages(vp, pt)
+        cells = [
+            ("contiguous_xla", jax.jit(lambda q, kc=kc, vc=vc, lens=lens:
+                                       ops.softmax_decode(q, kc, vc, lens,
+                                                          backend="xla"))),
+            ("paged_xla", jax.jit(lambda q, kp=kp, vp=vp, pt=pt, lens=lens:
+                                  ops.paged_attention(q, kp, vp, pt, lens,
+                                                      backend="xla"))),
+        ]
+        for name, fn in cells:
+            t = _t(fn, q, reps=5)
+            print(f"paged,{name}_decode_tokens_per_s_n{n},{b/t:.1f}")
+            record["cells"].append({"impl": name, "n": n,
+                                    "decode_ms": round(t * 1e3, 3),
+                                    "tokens_per_s": round(b / t, 1)})
+        if on_tpu:
+            fn = jax.jit(lambda q, kp=kp, vp=vp, pt=pt, lens=lens:
+                         ops.paged_attention(q, kp, vp, pt, lens,
+                                             backend="pallas"))
+            t = _t(fn, q, reps=5)
+            print(f"paged,paged_pallas_decode_tokens_per_s_n{n},{b/t:.1f}")
+            record["cells"].append({"impl": "paged_pallas", "n": n,
+                                    "decode_ms": round(t * 1e3, 3),
+                                    "tokens_per_s": round(b / t, 1)})
+        else:
+            record["cells"].append({"impl": "paged_pallas", "n": n,
+                                    "decode_ms": None,
+                                    "tokens_per_s": None,
+                                    "skipped": "requires TPU"})
+
+    # interpret-mode parity cell (what CI asserts on): paged pallas ==
+    # paged xla == contiguous decode on the gathered layout
+    n = 256
+    q, kp, vp, pt, lens = setup(n)
+    o_pl = ops.paged_attention(q, kp, vp, pt, lens,
+                               backend="pallas_interpret")
+    o_x = ops.paged_attention(q, kp, vp, pt, lens, backend="xla")
+    o_c = ops.softmax_decode(q, gather_pages(kp, pt), gather_pages(vp, pt),
+                             lens, backend="xla")
+    err = max(float(jnp.abs(o_pl - o_x).max()),
+              float(jnp.abs(o_x - o_c).max()))
+    print(f"paged,interpret_parity_maxerr_n{n},{err:.2e}")
+    record["interpret_parity"] = {"n": n, "maxerr": err,
+                                  "pass": err < 2e-5}
+    os.makedirs(os.path.dirname(json_path), exist_ok=True)
+    with open(json_path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"paged,json_artifact,{json_path}")
+    if not record["interpret_parity"]["pass"]:
+        raise SystemExit(f"paged interpret parity failed: {err}")
+
+
 def bench_roofline():
     """Emit the roofline tables from the dry-run artifacts."""
     from repro.analysis.roofline import format_table, load_artifacts
@@ -348,7 +440,8 @@ def bench_roofline():
 
 BENCHES = {"table1": bench_table1, "fig2": bench_fig2, "fig3": bench_fig3,
            "fig4": bench_fig4, "fig5": bench_fig5, "serve": bench_serve,
-           "flash": bench_flash, "roofline": bench_roofline}
+           "flash": bench_flash, "paged": bench_paged,
+           "roofline": bench_roofline}
 
 
 def main() -> None:

@@ -28,6 +28,22 @@ class LACfg:
 
 
 @dataclasses.dataclass(frozen=True)
+class PagingCfg:
+    """Paged-KV serving cache (vLLM-style block pool; docs/paged_kv.md).
+
+    When set on a softmax-backend config, the decode cache becomes a
+    preallocated arena of `num_pages` fixed-size KV blocks per layer and
+    requests address it through per-slot page tables instead of owning a
+    contiguous max_len region.  `num_pages` counts TOTAL arena pages,
+    including the one page the serving engine reserves as a write sink
+    for retired slots (so num_pages - 1 are allocatable).
+    """
+
+    page_size: int = 16    # tokens per KV block
+    num_pages: int = 0     # total arena pages (engine reserves one)
+
+
+@dataclasses.dataclass(frozen=True)
 class MoECfg:
     num_experts: int
     top_k: int
@@ -75,6 +91,9 @@ class ModelConfig:
     mixer: str = "attention"       # attention | mla | mamba2
     attention_backend: str = "linear"  # linear (paper) | softmax (baseline)
     la: LACfg = LACfg()
+    # paged-KV serving cache (softmax backend only; set by the serving
+    # engine's --page-size/--num-pages, never by model presets)
+    paging: Optional[PagingCfg] = None
     qkv_bias: bool = False
     # ---- block
     mlp_act: str = "swiglu"        # swiglu | gelu

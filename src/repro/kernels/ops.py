@@ -3,8 +3,10 @@
 Kernel selection is data-driven: each (family, impl) pair is a registered
 `KernelImpl`.  Families are the attention score shapes ("linear" — the
 paper's kernelized attention —, "softmax", the Regular-Attention
-baseline, and "ssd", the decay-gated Mamba-2 duality of Appendix B);
-impls are execution backends:
+baseline, "softmax_decode", its one-token-per-slot contiguous-cache
+decode, "paged", the paged-KV serving decode of docs/paged_kv.md, and
+"ssd", the decay-gated Mamba-2 duality of Appendix B); impls are
+execution backends:
 
   "xla"              chunked lax.scan (core.chunked / core.softmax)
   "pallas"           Pallas TPU kernels (kernels.linear_attention / .flash_attention)
@@ -42,7 +44,8 @@ from repro.kernels import ref as _ref
 __all__ = [
     "KernelImpl", "register_kernel", "get_kernel", "kernel_names",
     "la_causal", "la_causal_learnable", "la_prefill", "la_noncausal",
-    "la_decode_step", "softmax_attention", "softmax_causal", "ssd_causal",
+    "la_decode_step", "softmax_attention", "softmax_causal",
+    "softmax_decode", "paged_attention", "ssd_causal",
     "LAState", "init_state", "default_backend", "DEFAULT_CHUNK",
 ]
 
@@ -268,6 +271,93 @@ def softmax_attention(q, k, v, *, causal: bool = True,
     if causal and q_offset is None and impl.bwd is not None:
         return softmax_causal(q, k, v, chunk, resolved)
     return impl.fwd(q, k, v, causal, chunk, q_offset)
+
+
+# ---------------------------------------------------------------------------
+# Softmax-decode family (one token per slot against a contiguous KV cache)
+#
+# Decode against the batched max_len cache used to live as an inline
+# einsum in mixers/softmax.py; registering it here makes contiguous and
+# paged decode both registry-dispatched (and parity-testable against
+# each other).  Only an xla impl exists — the kernelized decode path IS
+# the "paged" family below; impl names without a softmax_decode entry
+# fall back to xla in `softmax_decode`.
+# ---------------------------------------------------------------------------
+
+def _softmax_decode_xla(q, k, v, lengths):
+    """q: (B, H, 1, D); k, v: (B, Hkv, S, D); lengths: (B,) valid keys
+    per slot (the just-written token included).  Grouped-native, f32
+    accumulation, row-max-subtracting softmax."""
+    b, hkv, s, d = k.shape
+    h = q.shape[1]
+    g = h // hkv
+    mask_j = (jax.lax.broadcasted_iota(jnp.int32, (b, s), 1)
+              < lengths[:, None])                          # (B, S)
+    qg = q.reshape(b, hkv, g, 1, d).astype(jnp.float32)
+    s_ = jnp.einsum("bhgid,bhjd->bhgij", qg, k.astype(jnp.float32),
+                    preferred_element_type=jnp.float32) / d ** 0.5
+    s_ = jnp.where(mask_j[:, None, None, None, :], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bhgij,bhjd->bhgid", p, v.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, 1, d).astype(q.dtype)
+
+
+register_kernel("softmax_decode", "xla", fwd=_softmax_decode_xla)
+register_kernel("softmax_decode", "ref", fwd=_softmax_decode_xla)
+
+
+def softmax_decode(q, k, v, lengths, *, backend: str = "auto"):
+    """Contiguous-cache softmax decode through the registry.
+
+    Impl names with no softmax_decode entry (the pallas flash impls are
+    prefill/train kernels) run the xla impl — decode through a Pallas
+    kernel is the paged path (`paged_attention`).
+    """
+    resolved = default_backend() if backend == "auto" else backend
+    impl = _KERNELS.get(("softmax_decode", resolved))
+    if impl is None:
+        impl = get_kernel("softmax_decode", "xla")
+    return impl.fwd(q, k, v, lengths)
+
+
+# ---------------------------------------------------------------------------
+# Paged family (serving decode over a paged KV cache — docs/paged_kv.md)
+#
+# fwd: (q, k_pages, v_pages, page_table, lengths) -> o.  Inference-only
+# (no bwd): decode never trains.  The pallas impls gather K/V pages
+# through a scalar-prefetched page table; xla/ref gather then softmax.
+# ---------------------------------------------------------------------------
+
+def _paged_xla_fwd(q, k_pages, v_pages, page_table, lengths):
+    from repro.kernels import paged_attention as _pg
+    return _pg.paged_attention_xla(q, k_pages, v_pages, page_table, lengths)
+
+
+def _paged_pallas_fwd(interpret):
+    def fwd(q, k_pages, v_pages, page_table, lengths):
+        from repro.kernels import paged_attention as _pg
+        return _pg.paged_attention_pallas(q, k_pages, v_pages, page_table,
+                                          lengths, interpret=interpret)
+    return fwd
+
+
+register_kernel("paged", "xla", fwd=_paged_xla_fwd)
+register_kernel("paged", "pallas", fwd=_paged_pallas_fwd(False))
+register_kernel("paged", "pallas_interpret", fwd=_paged_pallas_fwd(True))
+register_kernel("paged", "ref", fwd=_paged_xla_fwd)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    backend: str = "auto"):
+    """Paged-KV decode through the registry (one query token per slot).
+
+    q: (B, H, 1, D); k_pages/v_pages: (P, Hkv, ps, D) shared arenas;
+    page_table: (B, Pmax) int32; lengths: (B,) int32.  cfg.la.backend
+    picks the impl like every other family ("auto": pallas on TPU).
+    """
+    return get_kernel("paged", backend).fwd(q, k_pages, v_pages,
+                                            page_table, lengths)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,184 @@
+"""Pallas TPU paged-attention DECODE kernel (vLLM-style paged KV).
+
+The serving engine's paged softmax path (docs/paged_kv.md) keeps each
+layer's KV in a shared arena of fixed-size pages and addresses it with
+per-slot page tables; this module is the kernel that reads that layout.
+It finally runs softmax DECODE through a kernel instead of the per-slot
+einsum that mixers/softmax.py carried since the seed (ROADMAP item).
+
+`paged_attention_pallas` — one query token per slot against its paged
+context:
+
+  * grid (B, H, Pmax) with the page walk as the sequential axis; the
+    page table and per-slot lengths ride in via scalar prefetch
+    (PrefetchScalarGridSpec), so the KV BlockSpec index map resolves
+    `page_table[b, i]` BEFORE the block DMA is issued — the kernel
+    gathers K/V pages straight from the arena, no host-side gather;
+  * GQA-native: the arena BlockSpecs index by `head // group`, grouped
+    query heads stream the same page once (the arena is (P, Hkv, ps, d),
+    never expanded to H);
+  * per-slot lengths: page-walk iterations past a slot's last allocated
+    page are clamped to it in the index map (the pipeline re-fetches
+    nothing) and their compute is skipped, so each slot pays for ITS
+    context, not the deepest one; in-page tail keys mask by length;
+  * logsumexp-stable: online softmax with a running max/sum in VMEM
+    scratch, f32 accumulation, and a guarded finalize divide so a slot
+    with length 0 (empty / retired) yields zeros, never NaN.
+
+`paged_attention_xla` is the gather-then-softmax oracle (also the CPU
+serving impl); both register as the "paged" KernelImpl family in
+kernels/ops.py, mirroring linear/softmax/ssd.  Decode is inference-only,
+so the family has no backward.
+
+Validated in interpret mode against the oracle and against the
+contiguous-cache decode (tests/test_paging.py); TPU is the lowering
+target.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# XLA oracle / CPU impl: gather the pages, then masked softmax
+# ---------------------------------------------------------------------------
+
+def gather_pages(pages, page_table):
+    """(P, Hkv, ps, d) arena + (B, Pmax) table -> contiguous (B, Hkv, S, d)
+    with S = Pmax * ps.  Entries past a slot's allocation gather the
+    engine's sink page — callers mask by length before reading them."""
+    b, pmax = page_table.shape
+    _, hkv, ps, d = pages.shape
+    gat = pages[page_table]                    # (B, Pmax, Hkv, ps, d)
+    return gat.transpose(0, 2, 1, 3, 4).reshape(b, hkv, pmax * ps, d)
+
+
+def paged_attention_xla(q, k_pages, v_pages, page_table, lengths):
+    """Reference paged decode: q (B, H, 1, d) over paged KV.
+
+    k_pages / v_pages: (P, Hkv, ps, d) shared arenas; page_table:
+    (B, Pmax) int32; lengths: (B,) int32 — slot b attends to its first
+    lengths[b] tokens (the just-written one included).  Returns
+    (B, H, 1, d) in q.dtype.
+
+    Paged == gather + contiguous, BY CONSTRUCTION: this runs the
+    registered "softmax_decode" xla impl on the gathered layout (one
+    masked-softmax decode to maintain, not two) and adds only the
+    guarded zeroing of fully-masked length-0 slots — parity with the
+    pallas kernel's guarded finalize.
+    """
+    from repro.kernels import ops as _ops
+    o = _ops.softmax_decode(q, gather_pages(k_pages, page_table),
+                            gather_pages(v_pages, page_table), lengths,
+                            backend="xla")
+    return jnp.where((lengths > 0)[:, None, None, None], o, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float, pmax: int):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+    length = len_ref[bi]
+    ps = k_ref.shape[2]
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # pages at or past the slot's frontier were clamped in the index map
+    # (no DMA) and contribute nothing — skip their compute entirely
+    @pl.when(pi * ps < length)
+    def _step():
+        q = q_ref[0, 0].astype(F32)            # (1, d)
+        k = k_ref[0, 0].astype(F32)            # (ps, d)
+        v = v_ref[0, 0].astype(F32)
+        s = scale * jnp.dot(q, k.T, preferred_element_type=F32)  # (1, ps)
+        jj = pi * ps + lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        s = jnp.where(jj < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = corr * l_ref[...] + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=F32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == pmax - 1)
+    def _finalize():
+        # a length-0 slot accumulates l == 0; guard the divide so the
+        # retired slots of a serving batch finalize to zeros, not NaN
+        l = l_ref[...]
+        l_safe = jnp.where(l <= 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pages, v_pages, page_table, lengths,
+                           scale: float | None = None,
+                           interpret: bool = False):
+    """Paged-KV decode through Pallas; same contract as the xla oracle.
+
+    q: (B, H, 1, d); k_pages/v_pages: (P, Hkv, ps, d); page_table:
+    (B, Pmax) int32 arena-page ids; lengths: (B,) int32 per-slot context
+    lengths.  Every page id must be a valid arena index (the engine's
+    sink page backs unallocated table entries).
+    """
+    b, h, nq, d = q.shape
+    assert nq == 1, f"paged_attention is a decode kernel (nq={nq})"
+    hkv, ps = k_pages.shape[1], k_pages.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    pmax = page_table.shape[1]
+    scale = (1.0 / d ** 0.5) if scale is None else scale
+
+    def kv_index(bi, hi, pi, pt, lens):
+        # clamp the walk at the slot's last allocated page: iterations
+        # past it keep the same block index, so no new DMA is issued
+        frontier = jnp.maximum(lens[bi] - 1, 0) // ps
+        return (pt[bi, jnp.minimum(pi, frontier)], hi // group, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, pmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda bi, hi, pi, pt, lens: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d), kv_index),
+            pl.BlockSpec((1, 1, ps, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, 1, d), lambda bi, hi, pi, pt, lens: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), F32),
+            pltpu.VMEM((1, 1), F32),
+            pltpu.VMEM((1, 1), F32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, pmax=pmax),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)

@@ -7,8 +7,12 @@ engine (serve/engine.py).
 Admission defaults to fixed slots; --budget-mb switches to ByteBudget
 admission (the slot count then resolves from the backend's exact
 per-slot decode-cache bytes, so linear admits far more than softmax at
-the same budget).  --json-out writes the throughput record for CI
-artifacts.
+the same budget).  --page-size switches the softmax backend to the
+paged-KV cache (docs/paged_kv.md): with --budget-mb the budget buys an
+arena of KV pages (PagedAdmission — requests admit by the pages they
+actually need), otherwise --num-pages (or a worst-case default) sizes
+the arena directly.  --json-out writes the throughput record — and the
+pages-in-use stats when paged — for CI artifacts.
 """
 from __future__ import annotations
 
@@ -25,6 +29,7 @@ from repro.kernels import ops as _ops
 from repro.models import model as mdl
 from repro.serve.cache import per_slot_bytes
 from repro.serve.engine import Engine, Request
+from repro.serve.paging import PagedAdmission
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import ByteBudget, FixedSlots
 
@@ -43,7 +48,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--budget-mb", type=float, default=None,
-                    help="ByteBudget admission instead of fixed slots")
+                    help="ByteBudget admission instead of fixed slots "
+                         "(with --page-size: PagedAdmission)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged-KV cache: tokens per KV block "
+                         "(softmax backend only)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged-KV arena pages incl. the reserved sink "
+                         "(default: worst case for every slot)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill window (tokens)")
     ap.add_argument("--prompt-len", type=int, default=12)
@@ -55,17 +67,28 @@ def main():
                     help="also write the result record to this path")
     args = ap.parse_args()
 
+    if args.num_pages is not None and args.page_size is None:
+        ap.error("--num-pages requires --page-size (it sizes the paged "
+                 "arena; without a page size the cache stays contiguous)")
     cfg = get_config(args.arch, smoke=True)
     if args.backend:
         cfg = dataclasses.replace(cfg, attention_backend=args.backend)
     params = mdl.init_params(cfg, jax.random.PRNGKey(0))
-    if args.budget_mb is not None:
+    page_kwargs = {}
+    if args.budget_mb is not None and args.page_size is not None:
+        policy = PagedAdmission(int(args.budget_mb * 1024 * 1024),
+                                page_size=args.page_size,
+                                max_slots=args.slots,
+                                num_pages=args.num_pages)
+    elif args.budget_mb is not None:
         policy = ByteBudget(int(args.budget_mb * 1024 * 1024))
     else:
         policy = FixedSlots(args.slots)
+        page_kwargs = {"page_size": args.page_size,
+                       "num_pages": args.num_pages}
     engine = Engine(cfg, params, max_len=args.max_len, policy=policy,
                     prefill_chunk=args.prefill_chunk,
-                    kernel_backend=args.kernel)
+                    kernel_backend=args.kernel, **page_kwargs)
 
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p)
@@ -76,7 +99,12 @@ def main():
         engine.submit(Request(rid=rid, prompt=prompt,
                               max_new_tokens=args.max_new, sampling=sp))
     t0 = time.perf_counter()
-    done = engine.run()
+    done, peak_pages = {}, 0
+    for out in engine.stream():
+        if engine.pool is not None:
+            peak_pages = max(peak_pages, engine.pool.pages_in_use)
+        if out.finished:
+            done[out.rid] = engine.request(out.rid).generated
     dt = time.perf_counter() - t0
     total_tokens = sum(len(v) for v in done.values())
     record = {
@@ -93,6 +121,9 @@ def main():
         "wall_s": round(dt, 3),
         "tokens_per_s": round(total_tokens / dt, 1),
     }
+    if engine.pool is not None:
+        record["paging"] = dict(engine.page_stats(),
+                                peak_pages_in_use=peak_pages)
     print(json.dumps(record))
     if args.json_out:
         with open(args.json_out, "w") as f:

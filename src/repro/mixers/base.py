@@ -131,6 +131,19 @@ def get_backend(cfg_or_name) -> AttentionBackend:
             family = {"softmax": "softmax", "mamba2": "ssd"}.get(
                 name, "linear")
             _ops.get_kernel(family, la.backend)
+        if cfg.paging is not None:
+            if name != "softmax":
+                raise ValueError(
+                    f"cfg.paging (paged-KV cache) is a softmax-backend "
+                    f"serving feature; backend {name!r} keeps its own "
+                    f"non-paged decode cache — unset paging or switch "
+                    f"to the softmax backend")
+            if cfg.paging.page_size < 1 or cfg.paging.num_pages < 2:
+                raise ValueError(
+                    f"cfg.paging needs page_size >= 1 and num_pages >= 2 "
+                    f"(one page is the engine's reserved write sink), got "
+                    f"page_size={cfg.paging.page_size} "
+                    f"num_pages={cfg.paging.num_pages}")
         if cfg.family == "encdec" and not (backend.supports_noncausal
                                            and backend.supports_cross_decode):
             capable = [n for n, b in _BACKENDS.items()

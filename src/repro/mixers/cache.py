@@ -5,10 +5,11 @@ the serving engine scatters/gathers them purely as pytrees batched on
 their leading batch dim, so it never needs to know which backend — or
 cache shape — a model uses.
 
-  LAState    linear / mla    O(Dk·Dv) recurrent state (paper's story)
-  KVCache    softmax         O(S) per layer key/value ring
-  MambaCache mamba2          SSD state + depthwise-conv window tail
-  CrossState linear cross    precomputed encoder-side LA state (whisper)
+  LAState      linear / mla    O(Dk·Dv) recurrent state (paper's story)
+  KVCache      softmax         O(S) per layer key/value ring
+  PagedKVCache softmax (paged) fixed-size KV blocks + per-slot page table
+  MambaCache   mamba2          SSD state + depthwise-conv window tail
+  CrossState   linear cross    precomputed encoder-side LA state (whisper)
 """
 from __future__ import annotations
 
@@ -19,8 +20,8 @@ import jax.numpy as jnp
 from repro.core.chunked import LAState, init_state
 from repro.core.ssd import SSDState, init_ssd_state
 
-__all__ = ["LAState", "init_state", "KVCache", "MambaCache", "CrossState",
-           "SSDState", "init_ssd_state"]
+__all__ = ["LAState", "init_state", "KVCache", "PagedKVCache", "MambaCache",
+           "CrossState", "SSDState", "init_ssd_state"]
 
 
 class KVCache(NamedTuple):
@@ -28,6 +29,22 @@ class KVCache(NamedTuple):
 
     k: jnp.ndarray  # (B, Hkv, S, hd)
     v: jnp.ndarray  # (B, Hkv, S, hd)
+
+
+class PagedKVCache(NamedTuple):
+    """Softmax-backend paged decode cache (cfg.paging; docs/paged_kv.md).
+
+    The arenas are SHARED across slots — HBM is spent on pages actually
+    written, not on batch x max_len worst case — and `page_table[b, i]`
+    names the arena page holding slot b's tokens [i*ps, (i+1)*ps).
+    Unallocated table entries point at the engine's reserved write-sink
+    page (arena page num_pages - 1); attention masks by per-slot length,
+    so whatever that page holds is never read into a live output.
+    """
+
+    k_pages: jnp.ndarray     # (num_pages, Hkv, page_size, hd)
+    v_pages: jnp.ndarray     # (num_pages, Hkv, page_size, hd)
+    page_table: jnp.ndarray  # (B, ceil(max_len / page_size)) int32
 
 
 class MambaCache(NamedTuple):

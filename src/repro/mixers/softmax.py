@@ -9,10 +9,18 @@ registered in kernels.ops (flash v2's recomputation-based backward), so
 flash kernel is also GQA-native and understands per-slot q_offset, so
 continuation prefill below runs through Pallas too — no XLA fallback.
 
-Decode keeps an O(S) KVCache per layer and is PER-SLOT position correct:
-each continuously-batched slot scatters its new k/v at its own absolute
-position and masks its own context length, so slots at different depths
-decode exactly (this is what the O(D^2) linear backend gets for free).
+Decode is PER-SLOT position correct: each continuously-batched slot
+scatters its new k/v at its own absolute position and masks its own
+context length, so slots at different depths decode exactly (this is
+what the O(D^2) linear backend gets for free).  Both decode layouts go
+through the kernels.ops registry:
+
+  contiguous  O(S) KVCache per layer, "softmax_decode" family (xla)
+  paged       cfg.paging set: a PagedKVCache of fixed-size KV blocks
+              shared across slots, addressed by per-slot page tables —
+              the "paged" family, whose pallas impls gather pages via
+              scalar prefetch (kernels/paged_attention.py), so decode
+              runs through a kernel, not an einsum (docs/paged_kv.md)
 """
 from __future__ import annotations
 
@@ -21,10 +29,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ops as _ops
 from repro.mixers.base import register_backend
-from repro.mixers.cache import KVCache
+from repro.mixers.cache import KVCache, PagedKVCache
 from repro.mixers.qkv import GQAProjectionBackend
-
-F32 = jnp.float32
 
 
 def _pos2d(positions):
@@ -37,6 +43,25 @@ def _scatter_window(big, new, start):
     def one(b1, n1, s1):
         return jax.lax.dynamic_update_slice(b1, n1, (0, s1, 0))
     return jax.vmap(one)(big, new.astype(big.dtype), start)
+
+
+def _write_pages(pages, new, page_table, positions):
+    """Write `new` (B, Hkv, n, hd) into the shared (P, Hkv, ps, hd)
+    arena at ABSOLUTE positions (B, n), routed through the page table.
+    Slots own their pages exclusively (the pool copies any shared
+    frontier page on fork), so the scattered (page, offset) pairs never
+    collide across the batch."""
+    b, hkv, n, hd = new.shape
+    ps = pages.shape[2]
+    # clamp the page-table lookup: a RETIRED slot's position counter
+    # keeps advancing past its table (it decodes on as batch padding),
+    # and its whole row points at the engine's sink page anyway
+    idx = jnp.minimum(positions // ps, page_table.shape[1] - 1)
+    page = jnp.take_along_axis(page_table, idx, axis=1)
+    off = positions % ps
+    vals = new.transpose(0, 2, 1, 3).reshape(b * n, hkv, hd)
+    return pages.at[page.reshape(-1), :, off.reshape(-1)].set(
+        vals.astype(pages.dtype))
 
 
 @register_backend("softmax")
@@ -60,6 +85,19 @@ class SoftmaxAttentionBackend(GQAProjectionBackend):
 
     def init_cache(self, cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
         hd = cfg.resolved_head_dim
+        if cfg.paging is not None:
+            pg = cfg.paging
+            pages_per_seq = -(-max_len // pg.page_size)
+            arena = (pg.num_pages, cfg.num_kv_heads, pg.page_size, hd)
+            # unallocated table entries point at the LAST arena page —
+            # the engine reserves it as a write sink for retired slots,
+            # so a stale slot's decode writes never touch a live page
+            return PagedKVCache(
+                k_pages=jnp.zeros(arena, dtype),
+                v_pages=jnp.zeros(arena, dtype),
+                page_table=jnp.full((batch, pages_per_seq),
+                                    pg.num_pages - 1, jnp.int32),
+            )
         return KVCache(
             k=jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
             v=jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
@@ -72,33 +110,57 @@ class SoftmaxAttentionBackend(GQAProjectionBackend):
         mask) — chunked prefill is exact for the baseline too, matching
         what the recurrent backends get from their carried state.  On
         the pallas impls the offsets ride the flash kernel's scalar
-        prefetch (KV walk bounded at the deepest slot's frontier)."""
+        prefetch (KV walk bounded at the deepest slot's frontier).
+
+        With cfg.paging the window writes DIRECTLY into the slot's
+        allocated arena pages, then attends to a page-table gather of
+        its context (keys past the causal frontier — including whatever
+        the sink page holds — are masked by the q_offset causal mask)."""
         q, k, v = self.project_qkv(p, cfg, x, positions, compute_dtype)
-        start = _pos2d(positions)[:, 0]
-        cache = KVCache(k=_scatter_window(cache.k, k, start),
-                        v=_scatter_window(cache.v, v, start))
-        o = _ops.softmax_attention(q, cache.k, cache.v, causal=True,
+        pos2d = _pos2d(positions)
+        start = pos2d[:, 0]
+        if isinstance(cache, PagedKVCache):
+            from repro.kernels.paged_attention import gather_pages
+            cache = cache._replace(
+                k_pages=_write_pages(cache.k_pages, k, cache.page_table,
+                                     pos2d),
+                v_pages=_write_pages(cache.v_pages, v, cache.page_table,
+                                     pos2d))
+            kc = gather_pages(cache.k_pages, cache.page_table)
+            vc = gather_pages(cache.v_pages, cache.page_table)
+        else:
+            cache = KVCache(k=_scatter_window(cache.k, k, start),
+                            v=_scatter_window(cache.v, v, start))
+            kc, vc = cache.k, cache.v
+        o = _ops.softmax_attention(q, kc, vc, causal=True,
                                    chunk=cfg.la.chunk,
                                    backend=cfg.la.backend, q_offset=start)
         return self.out(p, o, compute_dtype), cache
 
     def decode(self, p, cfg, x, position, cache, compute_dtype=None):
-        """x: (B, 1, C); position: (B, 1) PER-SLOT absolute positions."""
+        """x: (B, 1, C); position: (B, 1) PER-SLOT absolute positions.
+
+        Contiguous: scatter at the slot's position, then the
+        "softmax_decode" registry impl masks each slot's own context
+        length (slot i attends to its first pos_i + 1 keys).  Paged:
+        write the token into the slot's current page and run the
+        "paged" family kernel — K/V pages are gathered through the
+        scalar-prefetched page table on the pallas impls."""
         q, k, v = self.project_qkv(p, cfg, x, position, compute_dtype)
-        pos = _pos2d(position)[:, 0]                       # (B,)
-        cache = KVCache(k=_scatter_window(cache.k, k, pos),
-                        v=_scatter_window(cache.v, v, pos))
-        b, hkv, s, hd = cache.k.shape
-        # per-slot context length: slot i attends to its first pos_i+1 keys
-        mask_j = (jax.lax.broadcasted_iota(jnp.int32, (b, s), 1)
-                  <= pos[:, None])                          # (B, S)
-        g = cfg.num_heads // hkv
-        qg = q.reshape(b, hkv, g, 1, hd).astype(F32)
-        s_ = jnp.einsum("bhgid,bhjd->bhgij", qg, cache.k.astype(F32),
-                        preferred_element_type=F32) / hd ** 0.5
-        s_ = jnp.where(mask_j[:, None, None, None, :], s_, -1e30)
-        pmat = jax.nn.softmax(s_, axis=-1)
-        o = jnp.einsum("bhgij,bhjd->bhgid", pmat, cache.v.astype(F32),
-                       preferred_element_type=F32)
-        o = o.reshape(b, cfg.num_heads, 1, hd).astype(x.dtype)
-        return self.out(p, o, compute_dtype), cache
+        pos2d = _pos2d(position)
+        pos = pos2d[:, 0]                                  # (B,)
+        if isinstance(cache, PagedKVCache):
+            cache = cache._replace(
+                k_pages=_write_pages(cache.k_pages, k, cache.page_table,
+                                     pos2d),
+                v_pages=_write_pages(cache.v_pages, v, cache.page_table,
+                                     pos2d))
+            o = _ops.paged_attention(q, cache.k_pages, cache.v_pages,
+                                     cache.page_table, pos + 1,
+                                     backend=cfg.la.backend)
+        else:
+            cache = KVCache(k=_scatter_window(cache.k, k, pos),
+                            v=_scatter_window(cache.v, v, pos))
+            o = _ops.softmax_decode(q, cache.k, cache.v, pos + 1,
+                                    backend=cfg.la.backend)
+        return self.out(p, o.astype(x.dtype), compute_dtype), cache

@@ -11,8 +11,15 @@ through the model, so new backends are accounted for automatically.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.models import model as mdl
+from repro.models.common import dtype_of
+
+
+def _cache_itemsize(cfg) -> int:
+    """KV-cache element bytes: the engine allocates in compute dtype."""
+    return jnp.zeros((), dtype_of(cfg.compute_dtype)).dtype.itemsize
 
 
 def cache_bytes(cfg, batch: int, max_len: int) -> int:
@@ -26,14 +33,39 @@ def per_slot_bytes(cfg, max_len: int) -> int:
     """Exact MARGINAL decode-cache bytes of one extra concurrent
     sequence at this context — the unit the ByteBudget admission policy
     spends.  Softmax pays O(max_len) per slot; the paper's linear state
-    is O(D^2) regardless of max_len."""
+    is O(D^2) regardless of max_len.
+
+    GQA-exact by construction: the eval_shape walks the backend's own
+    init_cache, whose KV leaves are (B, Hkv, S, hd) — grouped-query
+    softmax slots are charged for their Hkv KV heads, never the H query
+    heads (regression-tested in tests/test_serving.py)."""
     return cache_bytes(cfg, 2, max_len) - cache_bytes(cfg, 1, max_len)
 
 
-def kv_cache_bytes_analytic(cfg, batch: int, seq: int,
-                            dtype_bytes: int = 2) -> int:
-    """Softmax-backend KV cache: B * Hkv * S * hd * 2 (k and v) per layer."""
+def page_bytes(cfg, page_size: int, dtype_bytes: int | None = None) -> int:
+    """Bytes one KV page costs across all layers: 2 (k and v) *
+    page_size * Hkv * hd * itemsize per layer — the unit PagedAdmission
+    spends (page tables are int32 noise and are not charged)."""
     hd = cfg.resolved_head_dim
+    if dtype_bytes is None:
+        dtype_bytes = _cache_itemsize(cfg)
+    return (2 * page_size * cfg.num_kv_heads * hd * dtype_bytes
+            * cfg.num_layers)
+
+
+def kv_cache_bytes_analytic(cfg, batch: int, seq: int,
+                            dtype_bytes: int | None = None) -> int:
+    """Softmax-backend KV cache: B * Hkv * S * hd * 2 (k and v) per layer.
+
+    dtype_bytes resolves from cfg.compute_dtype (what the engine
+    actually allocates); the old hardcoded 2-byte default disagreed
+    with f32 caches by 2x — on the group-2 smoke configs that made the
+    "analytic" number coincide with an H-head bf16 cache, reading like
+    a GQA over-charge that per_slot_bytes (eval_shape-exact, Hkv-
+    correct) never actually had."""
+    hd = cfg.resolved_head_dim
+    if dtype_bytes is None:
+        dtype_bytes = _cache_itemsize(cfg)
     return (2 * batch * cfg.num_kv_heads * seq * hd * dtype_bytes
             * cfg.num_layers)
 

@@ -31,6 +31,16 @@ on the pallas kernel impls the per-slot offsets go through the flash
 kernel's scalar-prefetch path, no XLA fallback).  `kernel_backend`
 overrides cfg.la.backend at construction so a serving deployment can
 pick the kernel impl (e.g. "pallas" on TPU) without rebuilding configs.
+
+PAGED-KV mode (docs/paged_kv.md): a PagedAdmission policy — or explicit
+page_size/num_pages kwargs — switches the softmax KV cache to a shared
+arena of fixed-size pages (mixers.cache.PagedKVCache).  The engine owns
+a host-side PagePool: admission is gated on the pages a request
+actually needs, prefill windows write straight into its allocated
+pages, decode runs the "paged" kernel family (Pallas page-table
+gather), and finishing a request returns its pages to the free list.
+The last arena page is reserved as a write sink so retired slots —
+which keep decoding as batch padding — can never corrupt a live page.
 """
 from __future__ import annotations
 
@@ -41,11 +51,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import PagingCfg
 from repro.mixers import get_backend
+from repro.mixers.cache import PagedKVCache
 from repro.models import model as mdl
 from repro.serve import sampling as smp
-from repro.serve.scheduler import AdmissionPolicy, FixedSlots, \
-    RequestState, Scheduler, StepOutput
+from repro.serve.paging import PagedAdmission, PagePool
+from repro.serve.scheduler import AdmissionPolicy, ByteBudget, \
+    FixedSlots, RequestState, Scheduler, StepOutput
 
 
 @dataclasses.dataclass
@@ -93,9 +106,12 @@ def _gather_slot(cache, bdims, slot):
 
 
 def _scatter_slot(cache, small, bdims, slot):
-    """Write a batch-1 cache back into the slot's rows."""
+    """Write a batch-1 cache back into the slot's rows.  Leaves with no
+    batch dim (the paged-KV arenas, shared across slots) pass through
+    from `small`: prefill writes the slot's pages in place, so the
+    updated arena IS the new cache leaf."""
     return jax.tree.map(
-        lambda big, s, d: big if d < 0
+        lambda big, s, d: s.astype(big.dtype) if d < 0
         else jax.lax.dynamic_update_slice_in_dim(
             big, s.astype(big.dtype), slot, axis=d),
         cache, small, bdims)
@@ -110,7 +126,9 @@ class Engine:
                  max_len: int = 4096, eos_id: int = 2, seed: int = 0,
                  policy: Optional[AdmissionPolicy] = None,
                  prefill_chunk: Optional[int] = None,
-                 kernel_backend: Optional[str] = None):
+                 kernel_backend: Optional[str] = None,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None):
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "the serving engine targets decoder-only families; "
@@ -121,6 +139,41 @@ class Engine:
             cfg = dataclasses.replace(
                 cfg, la=dataclasses.replace(cfg.la,
                                             backend=kernel_backend))
+        self.policy = policy if policy is not None else FixedSlots(max_slots)
+        # paged-KV mode: PagedAdmission implies it (arena sized from the
+        # byte budget); --page-size/--num-pages request it explicitly.
+        # The LAST arena page is reserved as a write sink: retired slots
+        # keep decoding as batch padding, and their table rows point at
+        # it so those writes can never corrupt a live request's pages.
+        if isinstance(self.policy, PagedAdmission):
+            if page_size is not None or num_pages is not None:
+                raise ValueError(
+                    "PagedAdmission already fixes page_size/num_pages "
+                    "from its byte budget; drop the engine kwargs")
+            page_size = self.policy.page_size
+            num_pages = self.policy.resolve_num_pages(cfg)
+        elif page_size is not None and isinstance(self.policy, ByteBudget):
+            # ByteBudget's per-slot charge collapses to the int32
+            # page-table row once cfg.paging is set (the arena has no
+            # batch dim), so it would resolve a nonsense slot count —
+            # the page-aware byte policy IS PagedAdmission
+            raise ValueError(
+                "ByteBudget admission cannot size a paged engine; use "
+                "PagedAdmission(budget_bytes, page_size=...) instead")
+        if num_pages is not None and page_size is None:
+            raise ValueError(
+                "num_pages without page_size: set page_size to enable "
+                "the paged-KV cache")
+        if page_size is not None:
+            pages_per_seq = -(-max_len // page_size)
+            if num_pages is None:
+                # default arena: worst case for every slot, plus sink —
+                # same HBM as contiguous, still page-granular admission
+                n_slots = self.policy.resolve_slots(cfg, max_len)
+                num_pages = n_slots * pages_per_seq + 1
+            cfg = dataclasses.replace(
+                cfg, paging=PagingCfg(page_size=page_size,
+                                      num_pages=num_pages))
         self.cfg = cfg
         self.backend = get_backend(cfg)  # validates cfg at admission time
         self.params = params
@@ -128,7 +181,6 @@ class Engine:
         self.eos_id = eos_id
         self.seed = seed
         self.prefill_chunk = prefill_chunk
-        self.policy = policy if policy is not None else FixedSlots(max_slots)
         self.num_slots = self.policy.resolve_slots(cfg, max_len)
         self.max_slots = self.num_slots  # engine-v1 attribute, kept
         self.scheduler = Scheduler(self.num_slots)
@@ -136,6 +188,30 @@ class Engine:
         n = self.num_slots
         self.cache = mdl.init_cache(cfg, n, max_len)
         self._bdims = _cache_batch_dims(cfg, n, max_len)
+        self.pool: Optional[PagePool] = None
+        if cfg.paging is not None:
+            # dense-prefix (MoE first_dense_layers) caches carry extra
+            # per-layer PagedKVCaches under "prefix" whose page tables
+            # the engine does not manage — reject rather than serve
+            # silently-wrong prefix attention
+            if not isinstance(self.cache.get("blocks"), PagedKVCache) \
+                    or "prefix" in self.cache:
+                raise NotImplementedError(
+                    "paged-KV serving needs the plain decoder cache "
+                    "layout (softmax attention backend, no dense-prefix "
+                    "layers)")
+            self._sink_page = cfg.paging.num_pages - 1
+            blocks = self.cache["blocks"]
+            self._pages_per_seq = blocks.page_table.shape[-1]
+            # model.init_cache stacks layers with zeros_like, which
+            # wipes the mixer's sink-page fill — re-point EVERY row at
+            # the sink so slots that were never admitted pad their
+            # decode writes there, not into arena page 0
+            self.cache["blocks"] = blocks._replace(
+                page_table=jnp.full_like(blocks.page_table,
+                                         self._sink_page))
+            self.pool = PagePool(cfg.paging.num_pages - 1,
+                                 cfg.paging.page_size)
         self.next_tokens = np.zeros((n,), np.int32)
         self.remaining = np.zeros((n,), np.int64)
         # per-slot sampling state, mirrored into the jitted decode step
@@ -170,6 +246,14 @@ class Engine:
                 f"max_new_tokens ({req.max_new_tokens}) needs {need} cache "
                 f"positions but the engine was built with max_len="
                 f"{self.max_len}")
+        if self.pool is not None \
+                and self.pool.pages_needed(need) > self.pool.num_pages:
+            # would never admit: the FIFO queue would deadlock behind it
+            raise ValueError(
+                f"request {req.rid} needs {self.pool.pages_needed(need)} "
+                f"KV pages but the whole arena has {self.pool.num_pages} "
+                f"allocatable pages (page_size="
+                f"{self.pool.page_size})")
         if req.generated is None:
             req.generated = []
         self._requests[req.rid] = req
@@ -180,7 +264,7 @@ class Engine:
         into free slots, then decode one token for every decoding slot.
         Returns the StepOutputs emitted by this iteration."""
         outputs: List[StepOutput] = []
-        for slot, req in self.scheduler.admit():
+        for slot, req in self.scheduler.admit(self._can_admit):
             outputs.append(self._admit_into(slot, req))
         outputs.extend(self._decode_once())
         return outputs
@@ -199,6 +283,37 @@ class Engine:
         return done
 
     # -- admission + chunked prefill -----------------------------------
+    def _can_admit(self, req) -> bool:
+        """Beyond a free slot, a paged engine needs the request's pages
+        to be free RIGHT NOW (its worst-case token footprint — prompt
+        plus every decode position it may write).  The check RESERVES
+        the pages: Scheduler.admit may probe several queued requests
+        for one batch of free slots before the engine prefills any of
+        them, so a pure lookahead would over-admit against the same
+        free pages (a True verdict is always followed by admission, so
+        a reservation never leaks)."""
+        if self.pool is None:
+            return True
+        if not self.pool.can_allocate(self._token_footprint(req)):
+            return False
+        self.pool.allocate(req.rid, self._token_footprint(req))
+        return True
+
+    @staticmethod
+    def _token_footprint(req) -> int:
+        # cache positions written: len(prompt) prefill + max_new-1 decode
+        return len(req.prompt) + req.max_new_tokens - 1
+
+    def _set_page_row(self, slot: int, pages: List[int]) -> None:
+        """Point slot's page-table row (all layers) at `pages`, padding
+        the unallocated tail with the reserved sink page."""
+        row = np.full((self._pages_per_seq,), self._sink_page, np.int32)
+        row[:len(pages)] = pages
+        blocks = self.cache["blocks"]
+        self.cache["blocks"] = blocks._replace(
+            page_table=blocks.page_table.at[:, slot, :].set(
+                jnp.asarray(row)))
+
     def _prefill_fn(self, n: int, fresh: bool):
         """Jitted: one n-token prompt window through the slot's own rows
         of the batched cache (gather -> prefill -> scatter).  `fresh`
@@ -207,11 +322,22 @@ class Engine:
         key = (n, fresh)
         if key not in self._prefill_fns:
             cfg, bdims = self.cfg, self._bdims
+            paged = self.pool is not None
+
+            def zero_fresh(small):
+                if not paged:
+                    return jax.tree.map(jnp.zeros_like, small)
+                # paged: the arena and the just-assigned page-table row
+                # must survive; stale page CONTENT needs no zeroing (it
+                # is overwritten before the length mask exposes it)
+                return {k: (v if k == "blocks"
+                            else jax.tree.map(jnp.zeros_like, v))
+                        for k, v in small.items()}
 
             def fn(params, cache, tokens, slot):
                 small = _gather_slot(cache, bdims, slot)
                 if fresh:
-                    small = jax.tree.map(jnp.zeros_like, small)
+                    small = zero_fresh(small)
                 batch = {"tokens": tokens}
                 if cfg.rope_kind == "mrope":
                     start = small["rope_pos"]          # (1,)
@@ -235,6 +361,9 @@ class Engine:
         req.state = RequestState.PREFILLING
         if req.generated is None:
             req.generated = []
+        if self.pool is not None:
+            # pages were reserved by _can_admit at admission time
+            self._set_page_row(slot, self.pool.table(req.rid))
         sp = req.resolved_sampling()
         self._params_of[slot] = sp
         self._temp[slot] = sp.temperature
@@ -308,7 +437,23 @@ class Engine:
         req.state = RequestState.FINISHED
         req.finish_reason = reason
         self.scheduler.release(slot)
+        if self.pool is not None:
+            # return the pages and re-point the slot at the sink page:
+            # the retired slot keeps decoding as batch padding, and its
+            # writes must not land in pages the free list may re-issue
+            self.pool.free(req.rid)
+            self._set_page_row(slot, [])
         self._params_of[slot] = None
         self._temp[slot] = 0.0  # freed slots decode greedily (masked out)
         return StepOutput(req.rid, tok, req.state, finished=True,
                           finish_reason=reason)
+
+    # -- paged-KV stats (benchmarks / launcher artifacts) --------------
+    def page_stats(self) -> Optional[Dict[str, int]]:
+        """None unless paged; else allocatable / free / in-use pages."""
+        if self.pool is None:
+            return None
+        return {"page_size": self.pool.page_size,
+                "num_pages": self.pool.num_pages,
+                "free_pages": self.pool.free_pages,
+                "pages_in_use": self.pool.pages_in_use}

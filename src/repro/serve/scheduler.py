@@ -13,6 +13,11 @@ from the model config:
                   automatically, so at the same budget the linear /
                   mamba2 backends run orders of magnitude more
                   concurrent sequences than softmax.
+  PagedAdmission  (serve/paging.py) softmax + cfg.paging: the budget
+                  buys an arena of fixed-size KV pages and requests are
+                  admitted by the pages they ACTUALLY need, not a
+                  worst-case max_len charge — long contexts stay
+                  admissible until the arena is truly full.
 
 Requests move through a lifecycle the engine surfaces per step:
 
@@ -117,11 +122,21 @@ class Scheduler:
         req.state = RequestState.QUEUED
         self.queue.append(req)
 
-    def admit(self) -> List[Tuple[int, object]]:
-        """Fill free slots from the queue head; returns [(slot, request)]."""
+    def admit(self, can_admit=None) -> List[Tuple[int, object]]:
+        """Fill free slots from the queue head; returns [(slot, request)].
+
+        `can_admit(req) -> bool` gates each admission beyond slot
+        availability (the paged engine passes a free-page check).  A
+        True verdict is ALWAYS followed by admission of that request,
+        so the callback may reserve resources as its answer.  The
+        queue stays strictly FIFO: when the HEAD request doesn't fit,
+        admission stops rather than skipping ahead, so a large request
+        can't be starved by a stream of small ones."""
         admitted = []
         for i, occupant in enumerate(self.slots):
             if occupant is None and self.queue:
+                if can_admit is not None and not can_admit(self.queue[0]):
+                    break
                 req = self.queue.popleft()
                 self.slots[i] = req
                 admitted.append((i, req))

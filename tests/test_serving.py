@@ -354,6 +354,32 @@ def test_byte_budget_engine_runs_and_caps_memory(rng):
     assert sorted(done) == [0, 1, 2, 3, 4]
 
 
+def test_per_slot_bytes_charges_kv_heads_not_query_heads():
+    """Regression (GQA admission accounting): a grouped-query softmax
+    slot costs Hkv KV heads, so ByteBudget's per-slot charge must not
+    scale with the QUERY head count — and must match the Hkv analytic
+    formula at the engine's actual compute dtype (the old analytic
+    helper hardcoded 2-byte elements, which under f32 read like an
+    H-head charge on the group-2 configs)."""
+    base = dataclasses.replace(get_config("qwen2.5-3b", smoke=True),
+                               attention_backend="softmax", head_dim=16)
+    max_len = 256
+    g2 = dataclasses.replace(base, num_heads=4, num_kv_heads=2)
+    g4 = dataclasses.replace(base, num_heads=8, num_kv_heads=2)
+    mha = dataclasses.replace(base, num_heads=4, num_kv_heads=4)
+    # doubling the query heads at fixed Hkv must not change the charge
+    assert per_slot_bytes(g2, max_len) == per_slot_bytes(g4, max_len)
+    # doubling Hkv doubles the KV portion (the pos counter is 4 bytes)
+    kv2 = per_slot_bytes(g2, max_len) - 4
+    kv4 = per_slot_bytes(mha, max_len) - 4
+    assert kv4 == 2 * kv2
+    # analytic == exact at the config's own compute dtype
+    assert kv2 == kv_cache_bytes_analytic(g2, 1, max_len)
+    itemsize = 4 if g2.compute_dtype == "float32" else 2
+    assert kv2 == (2 * g2.num_kv_heads * max_len * 16 * itemsize
+                   * g2.num_layers)
+
+
 def test_byte_budget_rejects_impossible_budget():
     cfg = dataclasses.replace(get_config("qwen2.5-3b", smoke=True),
                               attention_backend="softmax")
