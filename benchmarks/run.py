@@ -21,6 +21,10 @@ paper's scaling claims (slopes) and memory ratios:
                       CPU the compiled-pallas rows are skipped and a
                       small interpret-mode parity cell exercises the
                       kernel instead
+  gla                — decay-gated LA fwd+bwd, xla scan vs the pallas
+                       GLA kernel at N ∈ {1k,4k} under GQA; emits
+                       artifacts/BENCH_gla.json (CPU: pallas rows null,
+                       interpret parity cell asserted by CI)
   paged              — decode tokens/s, paged-KV kernel vs the contiguous
                        per-slot decode, at context N ∈ {1k, 8k}; emits
                        artifacts/BENCH_paged.json with an interpret-mode
@@ -334,6 +338,76 @@ def bench_flash(json_path: str = "artifacts/BENCH_flash.json"):
         raise SystemExit(f"flash interpret parity failed: {err}")
 
 
+def bench_gla(json_path: str = "artifacts/BENCH_gla.json"):
+    """Decay-gated LA ("gla" KernelImpl family) acceptance numbers:
+    forward AND forward+backward wall-clock, xla chunked scan vs the
+    pallas GLA kernel, at N ∈ {1024, 4096} with GQA (H=8, Hkv=2, D=64).
+
+    The pallas rows need a TPU; on CPU they are recorded as null and an
+    interpret-mode cell at small N checks fwd+bwd parity against the
+    scan instead, so the artifact always proves the kernel path runs."""
+    import json
+    import os
+
+    from repro.core.numerics import l2_normalize
+    from repro.kernels import ops
+
+    b, h, hkv, d = 1, 8, 2, 64
+    on_tpu = jax.default_backend() == "tpu"
+    impls = ["xla"] + (["pallas"] if on_tpu else [])
+    record = {"device": jax.default_backend(), "shape":
+              {"B": b, "H": h, "Hkv": hkv, "D": d}, "cells": []}
+
+    def qkvd(n):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        return (l2_normalize(jax.random.normal(ks[0], (b, h, n, d))),
+                l2_normalize(jax.random.normal(ks[1], (b, hkv, n, d))),
+                jax.random.normal(ks[2], (b, hkv, n, d)),
+                -jax.nn.softplus(jax.random.normal(ks[3], (b, hkv, n))))
+
+    for n in (1024, 4096):
+        q, k, v, ld = qkvd(n)
+        for impl in ("xla", "pallas"):
+            if impl not in impls:
+                record["cells"].append({"impl": impl, "n": n,
+                                        "fwd_ms": None, "fwdbwd_ms": None,
+                                        "skipped": "requires TPU"})
+                continue
+            fwd = jax.jit(lambda q, k, v, ld, impl=impl: ops.gla_causal(
+                q, k, v, ld, 1.0, 1.0, 128, impl))
+            fb = jax.jit(jax.grad(
+                lambda q, k, v, ld, impl=impl: jnp.sum(ops.gla_causal(
+                    q, k, v, ld, 1.0, 1.0, 128, impl)),
+                argnums=(0, 1, 2, 3)))
+            t_f = _t(fwd, q, k, v, ld, reps=3)
+            t_fb = _t(fb, q, k, v, ld, reps=3)
+            print(f"gla,{impl}_fwd_ms_n{n},{t_f*1e3:.2f}")
+            print(f"gla,{impl}_fwdbwd_ms_n{n},{t_fb*1e3:.2f}")
+            record["cells"].append({"impl": impl, "n": n,
+                                    "fwd_ms": round(t_f * 1e3, 3),
+                                    "fwdbwd_ms": round(t_fb * 1e3, 3)})
+
+    # interpret-mode parity cell: fwd+bwd of the pallas GLA kernel vs
+    # the scan at a CPU-feasible size (this is what CI asserts on)
+    n = 128
+    q, k, v, ld = qkvd(n)
+    grads = jax.grad(lambda q, k, v, ld, be: jnp.sum(
+        ops.gla_causal(q, k, v, ld, 1.0, 1.0, 64, be) ** 2),
+        argnums=(0, 1, 2, 3))
+    g_pl = grads(q, k, v, ld, "pallas_interpret")
+    g_x = grads(q, k, v, ld, "xla")
+    err = max(float(jnp.abs(a - b_).max()) for a, b_ in zip(g_pl, g_x))
+    print(f"gla,interpret_bwd_maxerr_n{n},{err:.2e}")
+    record["interpret_parity"] = {"n": n, "grad_maxerr": err,
+                                  "pass": err < 2e-4}
+    os.makedirs(os.path.dirname(json_path), exist_ok=True)
+    with open(json_path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"gla,json_artifact,{json_path}")
+    if not record["interpret_parity"]["pass"]:
+        raise SystemExit(f"gla interpret parity failed: {err}")
+
+
 def bench_paged(json_path: str = "artifacts/BENCH_paged.json"):
     """Paged-KV acceptance numbers: one-token decode throughput over a
     paged cache ("paged" KernelImpl family) vs the contiguous per-slot
@@ -440,7 +514,7 @@ def bench_roofline():
 
 BENCHES = {"table1": bench_table1, "fig2": bench_fig2, "fig3": bench_fig3,
            "fig4": bench_fig4, "fig5": bench_fig5, "serve": bench_serve,
-           "flash": bench_flash, "paged": bench_paged,
+           "flash": bench_flash, "gla": bench_gla, "paged": bench_paged,
            "roofline": bench_roofline}
 
 

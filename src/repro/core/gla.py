@@ -1,0 +1,304 @@
+"""Chunked decay-gated (GLA-style) normalized linear attention — XLA path.
+
+The paper's chunked prefix-sum factorization (core/chunked.py) extended
+with a learned per-KV-head, per-token decay gamma_t = exp(log_decay_t)
+in (0, 1] multiplying the running KV state (Yang et al., "Gated Linear
+Attention Transformers with Hardware-Efficient Training"; ROADMAP
+"decay-gated LA"):
+
+    S_t = gamma_t S_{t-1} + k_t (x) [v_t, 1]      (D, D+1)
+    P_t = gamma_t P_{t-1} + [v_t, 1]              (D+1,)
+    F_t = a P_t + b q_t S_t ;  o_t = F[:D] / F[D]
+
+i.e. the attention weight of key n at query i is
+M_in (a + b q_i.k_n) with M_in = prod_{m=n+1..i} gamma_m — the paper's
+normalized f(x) = a + b x scores, decayed by the gate.  log_decay == 0
+degenerates EXACTLY to the linear family (la_fwd_chunked), which is the
+parity anchor the tests pin.
+
+Decay algebra runs in log space: within a chunk the exponents are
+differences of a monotone (non-increasing) cumsum, always <= 0, so every
+exp() here is <= 1 and the scan is stable in f32.
+
+The backward extends the paper's Eqs. 19-21 discipline to the gated
+mixer with residuals {q, k, v, log_decay, o, g} — O(N D).  With
+om_hat = omega / g,  h_i = o_i . om_hat_i and gmat = [om_hat, -h]:
+
+    dq_i  = b S_i @ gmat_i                        (forward chunk scan)
+    dk_n  = b U_n[:D] @ V'_n                      (reverse chunk scan,
+    dV'_n = b U_n[:D]^T k_n + a U_n[D]             U = decayed qaug gmat^T)
+    dcl_n = -V'_n . dV'_n                         (row term vanishes:
+                                                   df_i . f_i == 0 under
+                                                   the normalization)
+    dld_t = sum_{n >= t} dcl_n                    (reverse cumsum)
+
+Grouped-query attention is native: q is (B, H, N, D), k/v are
+(B, Hkv, N, D) and log_decay is (B, Hkv, N) — the decayed state is per
+KV head and shared across the query group, so the decay gate never
+materializes an H-fold copy.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# the chunk/pad/group plumbing is identical to the ungated scan's —
+# import it so a padding/convention fix there cannot miss this module
+from repro.core.chunked import _chunks, _group, _pad_to
+from repro.core.numerics import safe_div
+
+F32 = jnp.float32
+
+
+class GLAState(NamedTuple):
+    """Decayed recurrent GLA state (decode cache; constant in N).
+
+    Same shapes as the linear family's LAState — s: (B, Hkv, Dk, Dv+1),
+    p: (B, Hkv, Dv+1) — but every accumulated term carries the decay
+    from its token to the state's frontier.
+    """
+
+    s: jnp.ndarray
+    p: jnp.ndarray
+
+
+def init_gla_state(batch: int, num_kv_heads: int, dk: int,
+                   dv: int | None = None, dtype=jnp.float32) -> GLAState:
+    dv = dk if dv is None else dv
+    return GLAState(
+        s=jnp.zeros((batch, num_kv_heads, dk, dv + 1), dtype),
+        p=jnp.zeros((batch, num_kv_heads, dv + 1), dtype),
+    )
+
+
+def _decay_mask(cl: jnp.ndarray, tril: jnp.ndarray) -> jnp.ndarray:
+    """(..., C) cumulative log decay -> (..., C, C) M_in, n <= i else 0.
+
+    The exponent is clamped at 0: above-diagonal differences are
+    positive and would overflow under strong decay before the mask
+    zeroes them."""
+    diff = jnp.minimum(cl[..., :, None] - cl[..., None, :], 0.0)
+    return jnp.where(tril, jnp.exp(diff), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Forward (causal)
+# ---------------------------------------------------------------------------
+
+def gla_fwd_chunked(q, k, v, log_decay, a: float, b: float,
+                    chunk: int = 512, state: GLAState | None = None):
+    """Causal decay-gated normalized linear attention, chunked scan.
+
+    q: (B, H, N, Dk); k, v: (B, Hkv, N, D); log_decay: (B, Hkv, N) <= 0.
+    Returns (o, g, final_state): o (B, H, N, Dv) in q.dtype, g (B, H, N)
+    f32 normalizer, final_state GLAState (f32) — feeds decode.
+    """
+    bsz, h, n, dk = q.shape
+    dv = v.shape[-1]
+    hkv = k.shape[1]
+    out_dtype = q.dtype
+    c = min(chunk, n)
+    n_pad = -(-n // c) * c
+
+    qg = _group(_pad_to(q, n_pad, 2), hkv)
+    kp = _pad_to(k, n_pad, 2)
+    ones = jnp.ones(v.shape[:-1] + (1,), v.dtype)
+    # ones column appended BEFORE padding so padded rows contribute
+    # nothing to the carried state; padded log_decay rows are 0 (no
+    # decay), so padding never shrinks the carried state either
+    vaug = _pad_to(jnp.concatenate([v, ones], axis=-1), n_pad, 2)
+    ldp = _pad_to(log_decay.astype(F32), n_pad, 2)
+
+    q_c = _chunks(qg, c, 3)      # (T,B,Hkv,G,C,Dk)
+    k_c = _chunks(kp, c, 2)      # (T,B,Hkv,C,Dk)
+    va_c = _chunks(vaug, c, 2)   # (T,B,Hkv,C,Dv+1)
+    ld_c = _chunks(ldp, c, 2)    # (T,B,Hkv,C)
+
+    tril = jnp.tril(jnp.ones((c, c), bool))
+    if state is None:
+        state = init_gla_state(bsz, hkv, dk, dv)
+    a32, b32 = jnp.asarray(a, F32), jnp.asarray(b, F32)
+
+    def step(carry, inp):
+        s, p = carry
+        qc, kc, vac, ld = inp
+        cl = jnp.cumsum(ld, axis=-1)                 # (B,Hkv,C)
+        total = cl[..., -1:]
+        att = a32 + b32 * jnp.einsum("bhgid,bhjd->bhgij", qc, kc,
+                                     preferred_element_type=F32)
+        att = att * _decay_mask(cl, tril)[:, :, None]
+        f_intra = jnp.einsum("bhgij,bhje->bhgie", att, vac,
+                             preferred_element_type=F32)
+        f_inter = jnp.exp(cl)[:, :, None, :, None] * (
+            a32 * p[:, :, None, None, :]
+            + b32 * jnp.einsum("bhgid,bhde->bhgie", qc, s,
+                               preferred_element_type=F32))
+        f = f_intra + f_inter
+        vw = jnp.exp(total - cl)[..., None] * vac.astype(F32)
+        s = (jnp.exp(total)[..., None] * s
+             + jnp.einsum("bhjd,bhje->bhde", kc, vw,
+                          preferred_element_type=F32))
+        p = jnp.exp(total) * p + jnp.sum(vw, axis=-2)
+        return (s, p), f
+
+    (s_f, p_f), f_all = jax.lax.scan(step, (state.s.astype(F32),
+                                            state.p.astype(F32)),
+                                     (q_c, k_c, va_c, ld_c))
+    # (T,B,Hkv,G,C,Dv+1) -> (B,H,Np,Dv+1)
+    f_all = jnp.moveaxis(f_all, 0, 3).reshape(bsz, h, n_pad, dv + 1)
+    f_all = f_all[:, :, :n]
+    g = f_all[..., dv]
+    o = safe_div(f_all[..., :dv], g[..., None]).astype(out_dtype)
+    return o, g, GLAState(s_f, p_f)
+
+
+# ---------------------------------------------------------------------------
+# Backward (causal) — Eqs. 19-21 discipline, decay-gated
+# ---------------------------------------------------------------------------
+
+def gla_bwd_chunked(q, k, v, log_decay, o, g, omega, a: float, b: float,
+                    chunk: int = 512):
+    """Analytic gradient from residuals {q, k, v, ld, o, g} and omega.
+
+    Returns (dq, dk, dv, dlog_decay) in the respective input dtypes.
+    """
+    bsz, h, n, dk = q.shape
+    dv = v.shape[-1]
+    hkv = k.shape[1]
+    c = min(chunk, n)
+    n_pad = -(-n // c) * c
+    a32, b32 = jnp.asarray(a, F32), jnp.asarray(b, F32)
+
+    # om_hat = omega / g and h_i = o_i . om_hat_i (paper Eq. 20); the
+    # gated chain needs gmat = [om_hat, -h] = dF (normalizer column
+    # carries the -h term)
+    om_hat = safe_div(omega.astype(F32), g[..., None])
+    h_vec = jnp.sum(o.astype(F32) * om_hat, axis=-1)  # (B,H,N)
+
+    om_g = _group(_pad_to(om_hat, n_pad, 2), hkv)
+    h_g = _group(_pad_to(h_vec[..., None], n_pad, 2), hkv)
+    qg = _group(_pad_to(q, n_pad, 2), hkv)
+    kp = _pad_to(k, n_pad, 2)
+    vp = _pad_to(v, n_pad, 2)
+    ldp = _pad_to(log_decay.astype(F32), n_pad, 2)
+    ones = jnp.ones(vp.shape[:-1] + (1,), F32)
+    vaug = jnp.concatenate([vp.astype(F32), ones], -1)       # [v, 1]
+    qaug = jnp.concatenate([qg.astype(F32),
+                            jnp.ones(qg.shape[:-1] + (1,), F32)], -1)
+
+    q_c = _chunks(qg, c, 3)
+    qa_c = _chunks(qaug, c, 3)
+    k_c = _chunks(kp, c, 2)
+    va_c = _chunks(vaug, c, 2)
+    omh_c = _chunks(om_g, c, 3)
+    h_c = _chunks(h_g, c, 3)
+    ld_c = _chunks(ldp, c, 2)
+
+    tril = jnp.tril(jnp.ones((c, c), bool))
+
+    # ---- grad Q: forward scan carrying the forward's decayed state S
+    def step_q(carry, inp):
+        s = carry
+        qc, kc, vac, omc, hc, ld = inp
+        cl = jnp.cumsum(ld, axis=-1)
+        total = cl[..., -1:]
+        gmat = jnp.concatenate([omc, -hc], axis=-1)  # [om_hat, -h]
+        sc = jnp.einsum("bhgie,bhje->bhgij", gmat, vac,
+                        preferred_element_type=F32)
+        sc = sc * _decay_mask(cl, tril)[:, :, None]
+        dq_intra = jnp.einsum("bhgij,bhjd->bhgid", sc, kc,
+                              preferred_element_type=F32)
+        dq_inter = jnp.exp(cl)[:, :, None, :, None] * jnp.einsum(
+            "bhgie,bhde->bhgid", gmat, s, preferred_element_type=F32)
+        vw = jnp.exp(total - cl)[..., None] * vac
+        s = (jnp.exp(total)[..., None] * s
+             + jnp.einsum("bhjd,bhje->bhde", kc, vw,
+                          preferred_element_type=F32))
+        return s, b32 * (dq_intra + dq_inter)
+
+    s0 = jnp.zeros((bsz, hkv, dk, dv + 1), F32)
+    _, dq_all = jax.lax.scan(step_q, s0,
+                             (q_c, k_c, va_c, omh_c, h_c, ld_c))
+
+    # ---- grad K / grad V' fused: reverse scan, carry
+    # U = suffix sum of decayed qaug (x) gmat
+    def step_kv(carry, inp):
+        u = carry  # (B,Hkv,Dk+1,Dv+1)
+        qc, qac, kc, vac, omc, hc, ld = inp
+        cl = jnp.cumsum(ld, axis=-1)
+        total = cl[..., -1:]
+        e_p = jnp.exp(total - cl)                          # token -> end
+        gmat = jnp.concatenate([omc, -hc], axis=-1)
+        # m_hi[p, i] = exp(cl_i - cl_p) for i >= p (clamped, see
+        # _decay_mask)
+        diff = jnp.minimum(cl[..., None, :] - cl[..., :, None], 0.0)
+        m_hi = jnp.where(tril.T, jnp.exp(diff), 0.0)
+        # dK intra: sum_{i>=p} M_ip (gmat_i . V'_p) q_i
+        sc = jnp.einsum("bhgie,bhpe->bhgpi", gmat, vac,
+                        preferred_element_type=F32) * m_hi[:, :, None]
+        dk_intra = jnp.einsum("bhgpi,bhgid->bhpd", sc, qc,
+                              preferred_element_type=F32)
+        dk_inter = e_p[..., None] * jnp.einsum(
+            "bhpe,bhde->bhpd", vac, u[..., :dk, :],
+            preferred_element_type=F32)
+        # dV' intra: sum_{i>=p} M_ip (a + b q_i.k_p) gmat_i
+        att = a32 + b32 * jnp.einsum("bhgid,bhpd->bhgpi", qc, kc,
+                                     preferred_element_type=F32)
+        att = att * m_hi[:, :, None]
+        dva_intra = jnp.einsum("bhgpi,bhgie->bhpe", att, gmat,
+                               preferred_element_type=F32)
+        dva_inter = e_p[..., None] * (
+            b32 * jnp.einsum("bhpd,bhde->bhpe", kc, u[..., :dk, :],
+                             preferred_element_type=F32)
+            + a32 * u[..., dk, :][:, :, None, :])
+        omw = jnp.exp(cl)[:, :, None, :, None] * gmat
+        u = (jnp.exp(total)[..., None] * u
+             + jnp.einsum("bhgic,bhgie->bhce", qac, omw,
+                          preferred_element_type=F32))
+        return u, (b32 * (dk_intra + dk_inter), dva_intra + dva_inter)
+
+    u0 = jnp.zeros((bsz, hkv, dk + 1, dv + 1), F32)
+    _, (dk_all, dva_all) = jax.lax.scan(
+        step_kv, u0, (q_c, qa_c, k_c, va_c, omh_c, h_c, ld_c),
+        reverse=True)
+
+    dq = jnp.moveaxis(dq_all, 0, 3).reshape(bsz, h, n_pad, dk)[:, :, :n]
+    dk_o = jnp.moveaxis(dk_all, 0, 2).reshape(bsz, hkv, n_pad, dk)[:, :, :n]
+    dva = jnp.moveaxis(dva_all, 0, 2).reshape(bsz, hkv, n_pad,
+                                              dv + 1)[:, :, :n]
+    dv_o = dva[..., :dv]
+
+    # dcl_p = -V'_p . dV'_p (row term df_i.f_i vanishes exactly under
+    # the normalization); dld = reverse cumsum over tokens
+    vaug_n = vaug[:, :, :n]
+    dcl = -jnp.sum(vaug_n * dva, axis=-1)                    # (B,Hkv,N)
+    dld = jnp.cumsum(dcl[..., ::-1], axis=-1)[..., ::-1]
+    return (dq.astype(q.dtype), dk_o.astype(k.dtype),
+            dv_o.astype(v.dtype), dld.astype(log_decay.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving): O(D^2) per token, state independent of context length
+# ---------------------------------------------------------------------------
+
+def gla_decode_step(state: GLAState, q, k, v, log_decay, a: float,
+                    b: float):
+    """One-token decode.  q: (B, H, Dk); k, v: (B, Hkv, D); log_decay:
+    (B, Hkv).  Returns (new_state, o) with o: (B, H, Dv)."""
+    bsz, h, dk = q.shape
+    dv = v.shape[-1]
+    hkv = k.shape[1]
+    kf, vf = k.astype(F32), v.astype(F32)
+    gamma = jnp.exp(log_decay.astype(F32))                   # (B,Hkv)
+    vaug = jnp.concatenate([vf, jnp.ones((bsz, hkv, 1), F32)], -1)
+    s = (gamma[..., None, None] * state.s.astype(F32)
+         + kf[..., :, None] * vaug[..., None, :])
+    p = gamma[..., None] * state.p.astype(F32) + vaug
+    qg = q.reshape(bsz, hkv, h // hkv, dk)
+    f = (a * p[:, :, None, :]
+         + b * jnp.einsum("bhgd,bhde->bhge", qg.astype(F32), s,
+                          preferred_element_type=F32))
+    o = safe_div(f[..., :dv], f[..., dv:])
+    return GLAState(s, p), o.reshape(bsz, h, dv).astype(q.dtype)

@@ -1,0 +1,331 @@
+"""Pallas TPU kernels — decay-gated (GLA) normalized LA, fwd AND bwd.
+
+The linear-attention kernel scheme (kernels/linear_attention.py: B*H
+outer-block parallelism, sequential chunk axis, f32 VMEM scratch state,
+ones-column V augmentation fusing numerator and denominator into one
+MXU contraction) with the SSD kernels' log-space decay carried across
+chunks:
+
+  forward      state (Dk, Dv+1) scratch; chunk update
+               S <- exp(total) S + (exp(total - cl) k)^T V'
+  grad Q       forward scan carrying the same decayed state
+  grad K / V'  reverse scan carrying U = suffix sum of decayed
+               qaug (x) [om_hat, -h]; the augmented dV' column feeds the
+               log-decay gradient (computed by the caller:
+               dcl = -V'.dV', dld = reverse cumsum)
+
+Grouped-query attention reads k / v / log_decay through hi // group
+index maps — no per-head repetition in HBM; the grad-K/V grid runs at
+Hkv with the group's query heads folded into the row axis.
+
+Validated against kernels/ref.gla_ref and core/gla.py in interpret mode
+(this container is CPU-only; TPU is the lowering target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.numerics import safe_div
+
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+F32 = jnp.float32
+
+
+def _pad_seq(x, n_pad, axis: int = 2):
+    if x.shape[axis] == n_pad:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, n_pad - x.shape[axis])
+    return jnp.pad(x, w)
+
+
+def _tile_rows(x, g: int):
+    """(C,) -> (g*C,) — the grouped query heads folded into rows."""
+    return jnp.broadcast_to(x[None, :], (g, x.shape[0])).reshape(-1)
+
+
+def _decay_tri(cl_rows, cl_cols, row_mod: int | None = None):
+    """Masked decay matrix D[i, j] = exp(cl_i - cl_j) for i >= j, else 0
+    (`row_mod` folds grouped query rows: the causal test is i % c >= j).
+    The exponent is clamped at 0 — above-diagonal differences are
+    positive and would overflow under strong decay before the mask
+    zeroes them."""
+    r, c = cl_rows.shape[0], cl_cols.shape[0]
+    ii = lax.broadcasted_iota(jnp.int32, (r, c), 0)
+    if row_mod is not None:
+        ii = ii % row_mod
+    jj = lax.broadcasted_iota(jnp.int32, (r, c), 1)
+    diff = jnp.minimum(cl_rows[:, None] - cl_cols[None, :], 0.0)
+    return jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _gla_fwd_kernel(q_ref, k_ref, v_ref, ld_ref, o_ref, g_ref, s_ref,
+                    p_ref, *, a: float, b: float):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    q = q_ref[0, 0].astype(F32)
+    k = k_ref[0, 0].astype(F32)
+    v = v_ref[0, 0].astype(F32)
+    ld = ld_ref[0, 0].astype(F32)
+    c = q.shape[0]
+    dv = v.shape[1]
+    vaug = jnp.concatenate([v, jnp.ones((c, 1), F32)], axis=1)
+
+    cl = jnp.cumsum(ld)
+    total = cl[c - 1]
+    att = a + b * jnp.dot(q, k.T, preferred_element_type=F32)
+    att = att * _decay_tri(cl, cl)
+    f = (jnp.dot(att, vaug, preferred_element_type=F32)
+         + jnp.exp(cl)[:, None]
+         * (a * p_ref[...]
+            + b * jnp.dot(q, s_ref[...], preferred_element_type=F32)))
+    g = f[:, dv]
+    # guarded finalize: with a == 0 padded rows (q = k = v = 0) have
+    # g == 0 and the raw divide would NaN the whole run under
+    # jax_debug_nans even though the rows are sliced away (same class
+    # PR 3 fixed in the flash kernel)
+    gd = jnp.where(g == 0.0, 1.0, g)
+    o_ref[0, 0] = (f[:, :dv] / gd[:, None]).astype(o_ref.dtype)
+    g_ref[0, 0] = g.astype(g_ref.dtype)
+
+    vw = jnp.exp(total - cl)[:, None] * vaug
+    s_ref[...] = (jnp.exp(total) * s_ref[...]
+                  + jnp.dot(k.T, vw, preferred_element_type=F32))
+    p_ref[...] = (jnp.exp(total) * p_ref[...]
+                  + jnp.sum(vw, axis=0, keepdims=True))
+
+
+def gla_fwd_pallas(q, k, v, log_decay, a: float, b: float,
+                   chunk: int = 128, interpret: bool = False):
+    """Returns (o, g).  q: (B,H,N,Dk); k,v: (B,Hkv,N,D); ld: (B,Hkv,N)."""
+    bsz, h, n, dk = q.shape
+    dv = v.shape[-1]
+    hkv = k.shape[1]
+    group = h // hkv
+    c = min(chunk, n)
+    n_pad = -(-n // c) * c
+    t = n_pad // c
+    q, k, v = (_pad_seq(x, n_pad) for x in (q, k, v))
+    ld = _pad_seq(log_decay, n_pad)
+
+    kernel = functools.partial(_gla_fwd_kernel, a=a, b=b)
+    o, g = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, dk), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, c, dk),
+                         lambda bi, hi, ti: (bi, hi // group, ti, 0)),
+            pl.BlockSpec((1, 1, c, dv),
+                         lambda bi, hi, ti: (bi, hi // group, ti, 0)),
+            pl.BlockSpec((1, 1, c),
+                         lambda bi, hi, ti: (bi, hi // group, ti)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, dv), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, c), lambda bi, hi, ti: (bi, hi, ti)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, n_pad, dv), q.dtype),
+            jax.ShapeDtypeStruct((bsz, h, n_pad), F32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((dk, dv + 1), F32),
+            pltpu.VMEM((1, dv + 1), F32),
+        ],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, ld)
+    return o[:, :, :n], g[:, :, :n]
+
+
+# ---------------------------------------------------------------------------
+# Backward — grad Q (forward chunk scan carrying the decayed state)
+# ---------------------------------------------------------------------------
+
+def _gla_bwd_q_kernel(k_ref, v_ref, om_ref, h_ref, ld_ref, dq_ref, s_ref,
+                      *, b: float):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    k = k_ref[0, 0].astype(F32)
+    v = v_ref[0, 0].astype(F32)
+    om = om_ref[0, 0].astype(F32)
+    hv = h_ref[0, 0].astype(F32)
+    ld = ld_ref[0, 0].astype(F32)
+    c = k.shape[0]
+    vaug = jnp.concatenate([v, jnp.ones((c, 1), F32)], axis=1)
+    gmat = jnp.concatenate([om, -hv[:, None]], axis=1)  # [om_hat, -h]
+
+    cl = jnp.cumsum(ld)
+    total = cl[c - 1]
+    sc = jnp.dot(gmat, vaug.T, preferred_element_type=F32)
+    sc = sc * _decay_tri(cl, cl)
+    dq = (jnp.dot(sc, k, preferred_element_type=F32)
+          + jnp.exp(cl)[:, None]
+          * jnp.dot(gmat, s_ref[...].T, preferred_element_type=F32))
+    dq_ref[0, 0] = (b * dq).astype(dq_ref.dtype)
+
+    vw = jnp.exp(total - cl)[:, None] * vaug
+    s_ref[...] = (jnp.exp(total) * s_ref[...]
+                  + jnp.dot(k.T, vw, preferred_element_type=F32))
+
+
+# ---------------------------------------------------------------------------
+# Backward — grad K / grad V' (reverse chunk scan)
+# ---------------------------------------------------------------------------
+
+def _gla_bwd_kv_kernel(q_ref, k_ref, v_ref, om_ref, h_ref, ld_ref,
+                       dk_ref, dva_ref, u_ref, *, a: float, b: float):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    g_, c, dk = q_ref.shape[1], q_ref.shape[2], q_ref.shape[3]
+    dv = v_ref.shape[3]
+    q = q_ref[0].astype(F32).reshape(g_ * c, dk)
+    om = om_ref[0].astype(F32).reshape(g_ * c, dv)
+    hv = h_ref[0].astype(F32).reshape(g_ * c, 1)
+    k = k_ref[0, 0].astype(F32)
+    v = v_ref[0, 0].astype(F32)
+    ld = ld_ref[0, 0].astype(F32)
+
+    vaug = jnp.concatenate([v, jnp.ones((c, 1), F32)], axis=1)
+    gmat = jnp.concatenate([om, -hv], axis=1)              # (G*C, Dv+1)
+    u = u_ref[...]
+
+    cl = jnp.cumsum(ld)
+    total = cl[c - 1]
+    e_p = jnp.exp(total - cl)                              # (C,)
+    # m[i_fold, p] = exp(cl_{i % c} - cl_p), i % c >= p
+    m = _decay_tri(_tile_rows(cl, g_), cl, row_mod=c)
+
+    sc = jnp.dot(gmat, vaug.T, preferred_element_type=F32) * m
+    dk_ = (jnp.dot(sc.T, q, preferred_element_type=F32)
+           + e_p[:, None] * jnp.dot(vaug, u[:dk, :].T,
+                                    preferred_element_type=F32))
+    dk_ref[0, 0] = (b * dk_).astype(dk_ref.dtype)
+
+    att = (a + b * jnp.dot(q, k.T, preferred_element_type=F32)) * m
+    dva = (jnp.dot(att.T, gmat, preferred_element_type=F32)
+           + e_p[:, None] * (b * jnp.dot(k, u[:dk, :],
+                                         preferred_element_type=F32)
+                             + a * u[dk, :][None, :]))
+    dva_ref[0, 0] = dva.astype(dva_ref.dtype)
+
+    qaug = jnp.concatenate([q, jnp.ones((g_ * c, 1), F32)], axis=1)
+    cl_fold = _tile_rows(cl, g_)
+    u_ref[...] = (jnp.exp(total) * u_ref[...]
+                  + jnp.dot((jnp.exp(cl_fold)[:, None] * qaug).T, gmat,
+                            preferred_element_type=F32))
+
+
+def gla_bwd_pallas(q, k, v, log_decay, o, g, omega, a: float, b: float,
+                   chunk: int = 128, interpret: bool = False):
+    """Analytic gated backward from residuals {q, k, v, ld, o, g}.
+
+    Returns (dq, dk, dv, dlog_decay)."""
+    bsz, h, n, dk = q.shape
+    dv = v.shape[-1]
+    hkv = k.shape[1]
+    group = h // hkv
+    c = min(chunk, n)
+    n_pad = -(-n // c) * c
+    t = n_pad // c
+
+    om_hat = safe_div(omega.astype(F32), g[..., None])
+    h_vec = jnp.sum(o.astype(F32) * om_hat, axis=-1)  # (B,H,N)
+    q, k, v = (_pad_seq(x, n_pad) for x in (q, k, v))
+    om_hat = _pad_seq(om_hat, n_pad)
+    h_vec = _pad_seq(h_vec[..., None], n_pad)[..., 0]
+    ldp = _pad_seq(log_decay.astype(F32), n_pad)
+
+    dq = pl.pallas_call(
+        functools.partial(_gla_bwd_q_kernel, b=b),
+        grid=(bsz, h, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, dk),
+                         lambda bi, hi, ti: (bi, hi // group, ti, 0)),
+            pl.BlockSpec((1, 1, c, dv),
+                         lambda bi, hi, ti: (bi, hi // group, ti, 0)),
+            pl.BlockSpec((1, 1, c, dv), lambda bi, hi, ti: (bi, hi, ti, 0)),
+            pl.BlockSpec((1, 1, c), lambda bi, hi, ti: (bi, hi, ti)),
+            pl.BlockSpec((1, 1, c),
+                         lambda bi, hi, ti: (bi, hi // group, ti)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, c, dk),
+                               lambda bi, hi, ti: (bi, hi, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, n_pad, dk), q.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv + 1), F32)],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(k, v, om_hat, h_vec, ldp)
+
+    rev = lambda ti: t - 1 - ti  # noqa: E731 — reverse chunk iteration
+    dk_o, dva = pl.pallas_call(
+        functools.partial(_gla_bwd_kv_kernel, a=a, b=b),
+        grid=(bsz, hkv, t),
+        in_specs=[
+            pl.BlockSpec((1, group, c, dk),
+                         lambda bi, hi, ti: (bi, hi, rev(ti), 0)),
+            pl.BlockSpec((1, 1, c, dk),
+                         lambda bi, hi, ti: (bi, hi, rev(ti), 0)),
+            pl.BlockSpec((1, 1, c, dv),
+                         lambda bi, hi, ti: (bi, hi, rev(ti), 0)),
+            pl.BlockSpec((1, group, c, dv),
+                         lambda bi, hi, ti: (bi, hi, rev(ti), 0)),
+            pl.BlockSpec((1, group, c),
+                         lambda bi, hi, ti: (bi, hi, rev(ti))),
+            pl.BlockSpec((1, 1, c), lambda bi, hi, ti: (bi, hi, rev(ti))),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, dk),
+                         lambda bi, hi, ti: (bi, hi, rev(ti), 0)),
+            pl.BlockSpec((1, 1, c, dv + 1),
+                         lambda bi, hi, ti: (bi, hi, rev(ti), 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, hkv, n_pad, dk), k.dtype),
+            jax.ShapeDtypeStruct((bsz, hkv, n_pad, dv + 1), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk + 1, dv + 1), F32)],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, om_hat, h_vec, ldp)
+
+    dk_o, dva = dk_o[:, :, :n], dva[:, :, :n]
+    # log-decay gradient from the augmented dV' column:
+    # dcl = -V'.dV', dld = reverse cumsum (see core/gla.py)
+    vaug = jnp.concatenate(
+        [v[:, :, :n].astype(F32),
+         jnp.ones(v[:, :, :n].shape[:-1] + (1,), F32)], -1)
+    dcl = -jnp.sum(vaug * dva, axis=-1)
+    dld = jnp.cumsum(dcl[..., ::-1], axis=-1)[..., ::-1]
+    return (dq[:, :, :n], dk_o,
+            dva[..., :dv].astype(v.dtype), dld.astype(log_decay.dtype))

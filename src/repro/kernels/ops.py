@@ -4,9 +4,10 @@ Kernel selection is data-driven: each (family, impl) pair is a registered
 `KernelImpl`.  Families are the attention score shapes ("linear" — the
 paper's kernelized attention —, "softmax", the Regular-Attention
 baseline, "softmax_decode", its one-token-per-slot contiguous-cache
-decode, "paged", the paged-KV serving decode of docs/paged_kv.md, and
-"ssd", the decay-gated Mamba-2 duality of Appendix B); impls are
-execution backends:
+decode, "paged", the paged-KV serving decode of docs/paged_kv.md,
+"ssd", the decay-gated Mamba-2 duality of Appendix B, and "gla", the
+decay-gated normalized LA of core/gla.py); impls are execution
+backends:
 
   "xla"              chunked lax.scan (core.chunked / core.softmax)
   "pallas"           Pallas TPU kernels (kernels.linear_attention / .flash_attention)
@@ -36,17 +37,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import chunked as _chunked
+from repro.core import gla as _gla
 from repro.core import softmax as _softmax
 from repro.core import ssd as _ssd
 from repro.core.chunked import LAState, init_state, la_decode_step, la_noncausal
+from repro.core.gla import GLAState, init_gla_state
 from repro.kernels import ref as _ref
 
 __all__ = [
     "KernelImpl", "register_kernel", "get_kernel", "kernel_names",
     "la_causal", "la_causal_learnable", "la_prefill", "la_noncausal",
     "la_decode_step", "softmax_attention", "softmax_causal",
-    "softmax_decode", "paged_attention", "ssd_causal",
-    "LAState", "init_state", "default_backend", "DEFAULT_CHUNK",
+    "softmax_decode", "paged_attention", "ssd_causal", "gla_causal",
+    "gla_prefill", "gla_decode_step", "LAState", "init_state",
+    "GLAState", "init_gla_state", "default_backend", "DEFAULT_CHUNK",
 ]
 
 # one chunk default everywhere (configs.base.LACfg is the schema of record):
@@ -423,6 +427,97 @@ def _ssd_causal_bwd(chunk, backend, res, omega):
 
 
 ssd_causal.defvjp(_ssd_causal_fwd, _ssd_causal_bwd)
+
+
+# ---------------------------------------------------------------------------
+# GLA family impls (decay-gated normalized LA — ROADMAP "decay-gated LA";
+# core/gla.py has the math, kernels/gla.py the Pallas fwd+bwd)
+#
+# fwd: (q, k, v, log_decay, a, b, chunk) -> (o, g); bwd: (q, k, v,
+# log_decay, o, g, omega, a, b, chunk) -> (dq, dk, dv, dld).  None bwd
+# falls back to the xla backward like the linear family.
+# ---------------------------------------------------------------------------
+
+def _gla_xla_fwd(q, k, v, log_decay, a, b, chunk):
+    o, g, _ = _gla.gla_fwd_chunked(q, k, v, log_decay, a, b, chunk)
+    return o, g
+
+
+def _gla_pallas_fwd(interpret):
+    def fwd(q, k, v, log_decay, a, b, chunk):
+        from repro.kernels import gla as _pg
+        return _pg.gla_fwd_pallas(q, k, v, log_decay, a, b, chunk,
+                                  interpret=interpret)
+    return fwd
+
+
+def _gla_pallas_bwd(interpret):
+    def bwd(q, k, v, log_decay, o, g, omega, a, b, chunk):
+        from repro.kernels import gla as _pg
+        return _pg.gla_bwd_pallas(q, k, v, log_decay, o, g, omega, a, b,
+                                  chunk, interpret=interpret)
+    return bwd
+
+
+def _gla_ref_fwd(q, k, v, log_decay, a, b, chunk):
+    # the oracle computes its own normalizer — one masking convention
+    return _ref.gla_ref(q, k, v, log_decay, a, b, return_g=True)
+
+
+register_kernel("gla", "xla", fwd=_gla_xla_fwd, bwd=_gla.gla_bwd_chunked)
+register_kernel("gla", "pallas", fwd=_gla_pallas_fwd(False),
+                bwd=_gla_pallas_bwd(False))
+register_kernel("gla", "pallas_interpret", fwd=_gla_pallas_fwd(True),
+                bwd=_gla_pallas_bwd(True))
+register_kernel("gla", "ref", fwd=_gla_ref_fwd)  # bwd: xla fallback
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def gla_causal(q, k, v, log_decay, a: float = 1.0, b: float = 1.0,
+               chunk: int = DEFAULT_CHUNK, backend: str = "auto"):
+    """Causal decay-gated normalized LA (training entry).
+
+    q: (B, H, N, D); k, v: (B, Hkv, N, D), Hkv | H; log_decay:
+    (B, Hkv, N) <= 0.  Residuals are {q, k, v, ld, o, g} — O(N D) —
+    and gradients flow to q, k, v AND log_decay (the gate trains).
+    `backend` selects the "gla"-family KernelImpl like every other
+    family ("auto": pallas on TPU, else xla).
+    """
+    o, _ = get_kernel("gla", backend).fwd(q, k, v, log_decay, a, b, chunk)
+    return o
+
+
+def _gla_causal_fwd(q, k, v, log_decay, a, b, chunk, backend):
+    o, g = get_kernel("gla", backend).fwd(q, k, v, log_decay, a, b, chunk)
+    return o, (q, k, v, log_decay, o, g)
+
+
+def _gla_causal_bwd(a, b, chunk, backend, res, omega):
+    q, k, v, log_decay, o, g = res
+    impl = get_kernel("gla", backend)
+    bwd = impl.bwd or _gla.gla_bwd_chunked
+    return bwd(q, k, v, log_decay, o, g, omega, a, b, chunk)
+
+
+gla_causal.defvjp(_gla_causal_fwd, _gla_causal_bwd)
+
+
+def gla_prefill(q, k, v, log_decay, a: float = 1.0, b: float = 1.0,
+                chunk: int = DEFAULT_CHUNK,
+                state: GLAState | None = None):
+    """Causal GLA that also returns the decayed recurrent state.
+
+    Inference-only (no custom grad needed).  Returns (o, GLAState).
+    """
+    o, _, st = _gla.gla_fwd_chunked(q, k, v, log_decay, a, b, chunk,
+                                    state=state)
+    return o, st
+
+
+def gla_decode_step(state: GLAState, q, k, v, log_decay, a: float = 1.0,
+                    b: float = 1.0):
+    """One-token GLA decode: O(D^2), context enters only via the state."""
+    return _gla.gla_decode_step(state, q, k, v, log_decay, a, b)
 
 
 # ---------------------------------------------------------------------------

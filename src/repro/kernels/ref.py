@@ -85,6 +85,49 @@ def softmax_ref(
     return o.reshape(bq, h, nq, vf.shape[-1]).astype(out_dtype)
 
 
+def gla_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    log_decay: jnp.ndarray,
+    a: float = 1.0,
+    b: float = 1.0,
+    return_g: bool = False,
+):
+    """Decay-gated normalized linear attention oracle (GLA family).
+
+    o_i = sum_{n<=i} M_in (a + b q_i.k_n) v_n / sum_{n<=i} M_in (a + b
+    q_i.k_n), with M_in = prod_{m=n+1..i} gamma_m and gamma = exp(ld).
+
+    q: (B, H, N, D); k, v: (B, Hkv, N, D) with Hkv | H; log_decay:
+    (B, Hkv, N) <= 0 — the decayed state is per KV head, shared across
+    the query group, so the decay mask is built once per KV head.
+    log_decay == 0 reduces EXACTLY to `la_ref`.  O(N^2) — tests only.
+    return_g=True also returns the (B, H, N) f32 normalizer (the ref
+    KernelImpl's residual — computed here so the impl cannot drift
+    from the oracle's masking convention).
+    """
+    out_dtype = q.dtype
+    bq, h, n, d = q.shape
+    hkv = k.shape[1]
+    qg = q.reshape(bq, hkv, h // hkv, n, d).astype(jnp.float32)
+    kf, vf = (x.astype(jnp.float32) for x in (k, v))
+    cl = jnp.cumsum(log_decay.astype(jnp.float32), axis=-1)  # (B,Hkv,N)
+    diff = cl[..., :, None] - cl[..., None, :]
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    # double-where: masked exponents are large POSITIVE differences that
+    # overflow and would poison autodiff of this oracle with nan grads
+    m = jnp.where(mask, jnp.exp(jnp.where(mask, diff, 0.0)), 0.0)
+    s = a + b * jnp.einsum("bkgid,bkjd->bkgij", qg, kf)
+    w = s * m[:, :, None]
+    g = w.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bkgij,bkjd->bkgid", w, vf) / g
+    o = o.reshape(bq, h, n, vf.shape[-1]).astype(out_dtype)
+    if return_g:
+        return o, g[..., 0].reshape(bq, h, n)
+    return o
+
+
 def ssd_ref(
     q: jnp.ndarray,
     k: jnp.ndarray,

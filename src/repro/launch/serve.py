@@ -38,7 +38,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--backend", default=None,
-                    help="override cfg.attention_backend (linear|softmax)")
+                    help="override cfg.attention_backend "
+                         "(linear|gla|softmax)")
     ap.add_argument("--kernel", default=None,
                     help="kernel impl for the engine "
                          "(auto|xla|pallas|pallas_interpret); softmax + "
@@ -51,8 +52,10 @@ def main():
                     help="ByteBudget admission instead of fixed slots "
                          "(with --page-size: PagedAdmission)")
     ap.add_argument("--page-size", type=int, default=None,
-                    help="paged-KV cache: tokens per KV block "
-                         "(softmax backend only)")
+                    help="paged cache: tokens per KV block (softmax) "
+                         "or enable the paged recurrent-state arena "
+                         "(gla: one state page per slot, the token "
+                         "count is ignored)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="paged-KV arena pages incl. the reserved sink "
                          "(default: worst case for every slot)")

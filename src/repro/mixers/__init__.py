@@ -6,14 +6,14 @@ Public API:
   registered_backends()                 — names, for error messages / docs
   cache                                 — the per-backend cache namespace
 
-Importing this package registers the four built-in backends:
-linear (the paper), softmax (baseline), mla, mamba2.  See
-docs/attention_backends.md for how to add one.
+Importing this package registers the five built-in backends:
+linear (the paper), gla (decay-gated LA), softmax (baseline), mla,
+mamba2.  See docs/attention_backends.md for how to add one.
 """
 from repro.mixers.base import AttentionBackend, get_backend, get_mixer, \
     register_backend, registered_backends, resolve_backend_name
 from repro.mixers import cache  # noqa: F401  (re-exported namespace)
-from repro.mixers import linear, mamba2, mla, softmax  # noqa: F401  (register)
+from repro.mixers import gla, linear, mamba2, mla, softmax  # noqa: F401  (register)
 
 __all__ = [
     "AttentionBackend", "get_backend", "get_mixer", "register_backend",

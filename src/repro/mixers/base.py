@@ -120,24 +120,25 @@ def get_backend(cfg_or_name) -> AttentionBackend:
         raise KeyError(
             f"unknown attention backend {name!r}; registered backends: "
             f"{registered_backends()} (cfg.mixer selects mla/mamba2, "
-            f"cfg.attention_backend selects linear/softmax)")
+            f"cfg.attention_backend selects linear/gla/softmax)")
     if cfg is not None:
         la = cfg.la
         if la.chunk <= 0:
             raise ValueError(f"cfg.la.chunk must be positive, got {la.chunk}")
         if la.backend != "auto":
             # every mixer keys its kernel impl off cfg.la.backend; the
-            # linear/softmax/ssd families share the impl namespace
-            family = {"softmax": "softmax", "mamba2": "ssd"}.get(
-                name, "linear")
+            # linear/softmax/ssd/gla families share the impl namespace
+            family = {"softmax": "softmax", "mamba2": "ssd",
+                      "gla": "gla"}.get(name, "linear")
             _ops.get_kernel(family, la.backend)
         if cfg.paging is not None:
-            if name != "softmax":
+            if name not in ("softmax", "gla"):
                 raise ValueError(
-                    f"cfg.paging (paged-KV cache) is a softmax-backend "
-                    f"serving feature; backend {name!r} keeps its own "
+                    f"cfg.paging is a serving feature of the softmax "
+                    f"(paged-KV rows) and gla (paged recurrent state) "
+                    f"backends; backend {name!r} keeps its own "
                     f"non-paged decode cache — unset paging or switch "
-                    f"to the softmax backend")
+                    f"backends")
             if cfg.paging.page_size < 1 or cfg.paging.num_pages < 2:
                 raise ValueError(
                     f"cfg.paging needs page_size >= 1 and num_pages >= 2 "

@@ -5,11 +5,14 @@ the serving engine scatters/gathers them purely as pytrees batched on
 their leading batch dim, so it never needs to know which backend — or
 cache shape — a model uses.
 
-  LAState      linear / mla    O(Dk·Dv) recurrent state (paper's story)
-  KVCache      softmax         O(S) per layer key/value ring
-  PagedKVCache softmax (paged) fixed-size KV blocks + per-slot page table
-  MambaCache   mamba2          SSD state + depthwise-conv window tail
-  CrossState   linear cross    precomputed encoder-side LA state (whisper)
+  LAState       linear / mla    O(Dk·Dv) recurrent state (paper's story)
+  GLAState      gla             the same, decay-gated (core/gla.py)
+  PagedGLAState gla (paged)     GLA states in a shared page arena — one
+                                state page per slot (docs/paged_kv.md)
+  KVCache       softmax         O(S) per layer key/value ring
+  PagedKVCache  softmax (paged) fixed-size KV blocks + per-slot page table
+  MambaCache    mamba2          SSD state + depthwise-conv window tail
+  CrossState    linear cross    precomputed encoder-side LA state (whisper)
 """
 from __future__ import annotations
 
@@ -18,9 +21,11 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 from repro.core.chunked import LAState, init_state
+from repro.core.gla import GLAState, init_gla_state
 from repro.core.ssd import SSDState, init_ssd_state
 
-__all__ = ["LAState", "init_state", "KVCache", "PagedKVCache", "MambaCache",
+__all__ = ["LAState", "init_state", "GLAState", "init_gla_state",
+           "PagedGLAState", "KVCache", "PagedKVCache", "MambaCache",
            "CrossState", "SSDState", "init_ssd_state"]
 
 
@@ -45,6 +50,24 @@ class PagedKVCache(NamedTuple):
     k_pages: jnp.ndarray     # (num_pages, Hkv, page_size, hd)
     v_pages: jnp.ndarray     # (num_pages, Hkv, page_size, hd)
     page_table: jnp.ndarray  # (B, ceil(max_len / page_size)) int32
+
+
+class PagedGLAState(NamedTuple):
+    """GLA-backend paged decode cache (cfg.paging; docs/paged_kv.md).
+
+    The first backend to exercise the page abstraction with a NON-KV
+    state layout: a page holds one slot's whole (Hkv, Dk, Dv+1) decayed
+    recurrent state — state pages, not KV-row pages — so every request
+    needs exactly ONE page regardless of its token count (the paper's
+    O(D^2) story, page-granular).  `page_table[b, 0]` names the arena
+    page holding slot b's state; unassigned rows point at the engine's
+    reserved write sink (arena page num_pages - 1), where retired slots
+    keep decoding as batch padding without touching a live state.
+    """
+
+    s_pages: jnp.ndarray     # (num_pages, Hkv, Dk, Dv+1) f32
+    p_pages: jnp.ndarray     # (num_pages, Hkv, Dv+1) f32
+    page_table: jnp.ndarray  # (B, 1) int32
 
 
 class MambaCache(NamedTuple):

@@ -1,0 +1,127 @@
+"""Decay-gated linear attention backend (GLA-style; ROADMAP top item).
+
+The paper's normalized f(x) = a + b x linear attention (the `linear`
+backend) with a LEARNED per-KV-head, per-token decay gate multiplying
+the running KV state — the expressivity upgrade of Yang et al., "Gated
+Linear Attention Transformers with Hardware-Efficient Training", built
+on the paper's chunked-recurrence + analytic-backward discipline
+(core/gla.py, kernels/gla.py, registered as the "gla" KernelImpl
+family).
+
+The gate is a single dense head per layer: log_decay =
+log_sigmoid(x @ wg + DECAY_BIAS), one scalar per token per KV head
+(the decayed state is per KV head and shared across the query group, so
+the gate never materializes an H-fold copy).  DECAY_BIAS shifts the
+init toward gamma ~ 1, where the backend starts as EXACTLY the linear
+family (log_decay == 0 is the parity anchor in tests/test_kernels_gla)
+and learns to forget.
+
+Decode keeps the paper's O(D^2) recurrent state, decay-gated
+(GLAState).  With cfg.paging set, the state moves into a shared page
+arena (mixers.cache.PagedGLAState): the first NON-KV state layout
+through serve/paging.py's PagePool — one state page per slot, admitted
+by PagedAdmission on actual state bytes (docs/paged_kv.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import l2_normalize
+from repro.kernels import ops as _ops
+from repro.mixers.base import register_backend
+from repro.mixers.cache import GLAState, PagedGLAState, init_gla_state
+from repro.mixers.qkv import GQAProjectionBackend
+from repro.models.common import dense, dense_init
+
+F32 = jnp.float32
+
+# log_sigmoid(6) ~ -0.0025: init decay gamma ~ 0.9975 per token, so a
+# fresh layer behaves like the undecayed linear family and learns to
+# forget rather than having to learn to remember
+DECAY_BIAS = 6.0
+
+
+@register_backend("gla")
+class GLAAttentionBackend(GQAProjectionBackend):
+    # decay gating is a causal notion: no encoder / cross paths
+    supports_noncausal = False
+
+    def init(self, key, cfg, dtype=F32):
+        k1, k2 = jax.random.split(key)
+        p = super().init(k1, cfg, dtype)
+        p["wg"] = dense_init(k2, cfg.d_model, cfg.num_kv_heads,
+                             bias=True, dtype=dtype)
+        return p
+
+    def _log_decay(self, p, cfg, x, compute_dtype):
+        """x: (B, N, C) -> per-KV-head log decay (B, Hkv, N) <= 0."""
+        logits = dense(p["wg"], x, compute_dtype)          # (B, N, Hkv)
+        ld = jax.nn.log_sigmoid(logits.astype(F32) + DECAY_BIAS)
+        return ld.transpose(0, 2, 1)
+
+    def _qkv_ld(self, p, cfg, x, positions, compute_dtype):
+        q, k, v = self.project_qkv(p, cfg, x, positions, compute_dtype)
+        if cfg.la.normalize_qk:
+            # paper Eq. 22 — with a, b > 0 this keeps the decayed
+            # normalizer strictly positive, like the linear family
+            q, k = l2_normalize(q), l2_normalize(k)
+        return q, k, v, self._log_decay(p, cfg, x, compute_dtype)
+
+    def apply(self, p, cfg, x, positions, compute_dtype=None):
+        q, k, v, ld = self._qkv_ld(p, cfg, x, positions, compute_dtype)
+        la = cfg.la
+        o = _ops.gla_causal(q, k, v, ld, la.a, la.b, la.chunk, la.backend)
+        return self.out(p, o, compute_dtype)
+
+    def init_cache(self, cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+        hd = cfg.resolved_head_dim
+        if cfg.paging is not None:
+            pg = cfg.paging
+            # one state page per slot; unassigned rows -> the engine's
+            # reserved sink page (last arena page), like the paged-KV
+            # layout.  page_size is a KV-row notion and is ignored: a
+            # page IS one (Hkv, Dk, Dv+1) state block.
+            return PagedGLAState(
+                s_pages=jnp.zeros((pg.num_pages, cfg.num_kv_heads, hd,
+                                   hd + 1), F32),
+                p_pages=jnp.zeros((pg.num_pages, cfg.num_kv_heads,
+                                   hd + 1), F32),
+                page_table=jnp.full((batch, 1), pg.num_pages - 1,
+                                    jnp.int32),
+            )
+        return init_gla_state(batch, cfg.num_kv_heads, hd, hd)
+
+    @staticmethod
+    def _gather_state(cache: PagedGLAState) -> GLAState:
+        page = cache.page_table[:, 0]
+        return GLAState(s=cache.s_pages[page], p=cache.p_pages[page])
+
+    @staticmethod
+    def _scatter_state(cache: PagedGLAState, st: GLAState) -> PagedGLAState:
+        # live slots own distinct pages (engine invariant); retired
+        # slots share the sink page, where last-write-wins is fine
+        page = cache.page_table[:, 0]
+        return cache._replace(
+            s_pages=cache.s_pages.at[page].set(st.s.astype(F32)),
+            p_pages=cache.p_pages.at[page].set(st.p.astype(F32)))
+
+    def prefill(self, p, cfg, x, positions, cache, compute_dtype=None):
+        q, k, v, ld = self._qkv_ld(p, cfg, x, positions, compute_dtype)
+        la = cfg.la
+        paged = isinstance(cache, PagedGLAState)
+        st = self._gather_state(cache) if paged else cache
+        o, st = _ops.gla_prefill(q, k, v, ld, la.a, la.b, la.chunk,
+                                 state=st)
+        cache = self._scatter_state(cache, st) if paged else st
+        return self.out(p, o, compute_dtype), cache
+
+    def decode(self, p, cfg, x, position, cache, compute_dtype=None):
+        q, k, v, ld = self._qkv_ld(p, cfg, x, position, compute_dtype)
+        la = cfg.la
+        paged = isinstance(cache, PagedGLAState)
+        st = self._gather_state(cache) if paged else cache
+        st, o = _ops.gla_decode_step(st, q[:, :, 0], k[:, :, 0],
+                                     v[:, :, 0], ld[:, :, 0], la.a, la.b)
+        cache = self._scatter_state(cache, st) if paged else st
+        return self.out(p, o[:, :, None], compute_dtype), cache

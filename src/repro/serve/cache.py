@@ -42,10 +42,28 @@ def per_slot_bytes(cfg, max_len: int) -> int:
     return cache_bytes(cfg, 2, max_len) - cache_bytes(cfg, 1, max_len)
 
 
+def state_page_bytes(cfg) -> int:
+    """Bytes one GLA STATE page costs across all layers: a page holds a
+    whole (Hkv, Dk, Dv+1) + (Hkv, Dv+1) decayed recurrent state in f32
+    (mixers.cache.PagedGLAState) — independent of page_size, because a
+    state page is one slot's O(D^2) state, not a run of KV rows."""
+    hd = cfg.resolved_head_dim
+    per_layer = cfg.num_kv_heads * ((hd + 1) * hd + (hd + 1))
+    return per_layer * 4 * cfg.num_layers
+
+
 def page_bytes(cfg, page_size: int, dtype_bytes: int | None = None) -> int:
-    """Bytes one KV page costs across all layers: 2 (k and v) *
-    page_size * Hkv * hd * itemsize per layer — the unit PagedAdmission
-    spends (page tables are int32 noise and are not charged)."""
+    """Bytes one page costs across all layers — the unit PagedAdmission
+    spends (page tables are int32 noise and are not charged).
+
+    Softmax (KV pages): 2 (k and v) * page_size * Hkv * hd * itemsize
+    per layer.  GLA (state pages): one whole recurrent state per page,
+    page_size-independent (`state_page_bytes`).  Dispatches on the
+    config's resolved backend so both admission policies price the
+    arena a backend will actually allocate."""
+    from repro.mixers.base import resolve_backend_name
+    if resolve_backend_name(cfg) == "gla":
+        return state_page_bytes(cfg)
     hd = cfg.resolved_head_dim
     if dtype_bytes is None:
         dtype_bytes = _cache_itemsize(cfg)

@@ -52,8 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import PagingCfg
-from repro.mixers import get_backend
-from repro.mixers.cache import PagedKVCache
+from repro.mixers import get_backend, resolve_backend_name
+from repro.mixers.cache import PagedGLAState, PagedKVCache
 from repro.models import model as mdl
 from repro.serve import sampling as smp
 from repro.serve.paging import PagedAdmission, PagePool
@@ -165,7 +165,11 @@ class Engine:
                 "num_pages without page_size: set page_size to enable "
                 "the paged-KV cache")
         if page_size is not None:
-            pages_per_seq = -(-max_len // page_size)
+            # gla pages hold one slot's recurrent STATE each; softmax
+            # pages hold page_size KV rows (docs/paged_kv.md)
+            state_paged = resolve_backend_name(cfg) == "gla"
+            pages_per_seq = 1 if state_paged \
+                else -(-max_len // page_size)
             if num_pages is None:
                 # default arena: worst case for every slot, plus sink —
                 # same HBM as contiguous, still page-granular admission
@@ -189,19 +193,22 @@ class Engine:
         self.cache = mdl.init_cache(cfg, n, max_len)
         self._bdims = _cache_batch_dims(cfg, n, max_len)
         self.pool: Optional[PagePool] = None
+        self._state_paged = False
         if cfg.paging is not None:
             # dense-prefix (MoE first_dense_layers) caches carry extra
-            # per-layer PagedKVCaches under "prefix" whose page tables
+            # per-layer paged caches under "prefix" whose page tables
             # the engine does not manage — reject rather than serve
             # silently-wrong prefix attention
-            if not isinstance(self.cache.get("blocks"), PagedKVCache) \
+            blocks = self.cache.get("blocks")
+            if not isinstance(blocks, (PagedKVCache, PagedGLAState)) \
                     or "prefix" in self.cache:
                 raise NotImplementedError(
-                    "paged-KV serving needs the plain decoder cache "
-                    "layout (softmax attention backend, no dense-prefix "
-                    "layers)")
+                    "paged serving needs the plain decoder cache "
+                    "layout (softmax or gla attention backend, no "
+                    "dense-prefix layers)")
+            self._state_paged = isinstance(blocks, PagedGLAState)
+            self._zero_pages = None   # donated page-wipe jit, built lazily
             self._sink_page = cfg.paging.num_pages - 1
-            blocks = self.cache["blocks"]
             self._pages_per_seq = blocks.page_table.shape[-1]
             # model.init_cache stacks layers with zeros_like, which
             # wipes the mixer's sink-page fill — re-point EVERY row at
@@ -247,13 +254,16 @@ class Engine:
                 f"positions but the engine was built with max_len="
                 f"{self.max_len}")
         if self.pool is not None \
-                and self.pool.pages_needed(need) > self.pool.num_pages:
+                and self._req_pages(req) > self.pool.num_pages:
             # would never admit: the FIFO queue would deadlock behind it
+            kind = "state" if self._state_paged else "KV"
+            detail = "a page holds one slot's whole recurrent state" \
+                if self._state_paged \
+                else f"page_size={self.pool.page_size}"
             raise ValueError(
-                f"request {req.rid} needs {self.pool.pages_needed(need)} "
-                f"KV pages but the whole arena has {self.pool.num_pages} "
-                f"allocatable pages (page_size="
-                f"{self.pool.page_size})")
+                f"request {req.rid} needs {self._req_pages(req)} "
+                f"{kind} pages but the whole arena has "
+                f"{self.pool.num_pages} allocatable pages ({detail})")
         if req.generated is None:
             req.generated = []
         self._requests[req.rid] = req
@@ -286,18 +296,26 @@ class Engine:
     def _can_admit(self, req) -> bool:
         """Beyond a free slot, a paged engine needs the request's pages
         to be free RIGHT NOW (its worst-case token footprint — prompt
-        plus every decode position it may write).  The check RESERVES
-        the pages: Scheduler.admit may probe several queued requests
-        for one batch of free slots before the engine prefills any of
-        them, so a pure lookahead would over-admit against the same
-        free pages (a True verdict is always followed by admission, so
-        a reservation never leaks)."""
+        plus every decode position it may write; ONE state page for the
+        gla layout, whatever the token count).  The check RESERVES the
+        pages: Scheduler.admit may probe several queued requests for
+        one batch of free slots before the engine prefills any of them,
+        so a pure lookahead would over-admit against the same free
+        pages (a True verdict is always followed by admission, so a
+        reservation never leaks)."""
         if self.pool is None:
             return True
-        if not self.pool.can_allocate(self._token_footprint(req)):
+        need = self._req_pages(req)
+        if need > self.pool.free_pages:
             return False
-        self.pool.allocate(req.rid, self._token_footprint(req))
+        self.pool.allocate_pages(req.rid, need)
         return True
+
+    def _req_pages(self, req) -> int:
+        """Arena pages the request needs for its whole lifetime."""
+        if self._state_paged:
+            return 1   # one O(D^2) state page, independent of tokens
+        return self.pool.pages_needed(self._token_footprint(req))
 
     @staticmethod
     def _token_footprint(req) -> int:
@@ -306,10 +324,26 @@ class Engine:
 
     def _set_page_row(self, slot: int, pages: List[int]) -> None:
         """Point slot's page-table row (all layers) at `pages`, padding
-        the unallocated tail with the reserved sink page."""
+        the unallocated tail with the reserved sink page.  State pages
+        (gla) are also ZEROED on assignment: the recurrent state
+        accumulates, so a freed request's stale state must not seed the
+        next one's recurrence (KV pages need no wipe — attention masks
+        by length and rows are overwritten before they are exposed)."""
         row = np.full((self._pages_per_seq,), self._sink_page, np.int32)
         row[:len(pages)] = pages
         blocks = self.cache["blocks"]
+        if self._state_paged and pages:
+            # donated jit so XLA scatters the zeros in place — a bare
+            # .at[].set here would materialize a full copy of every
+            # layer's state arena per admission
+            if self._zero_pages is None:
+                self._zero_pages = jax.jit(
+                    lambda s, p, idx: (s.at[:, idx].set(0.0),
+                                       p.at[:, idx].set(0.0)),
+                    donate_argnums=(0, 1))
+            s_z, p_z = self._zero_pages(blocks.s_pages, blocks.p_pages,
+                                        jnp.asarray(pages, jnp.int32))
+            blocks = blocks._replace(s_pages=s_z, p_pages=p_z)
         self.cache["blocks"] = blocks._replace(
             page_table=blocks.page_table.at[:, slot, :].set(
                 jnp.asarray(row)))

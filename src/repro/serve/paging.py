@@ -95,9 +95,14 @@ class PagePool:
 
     def allocate(self, rid: int, num_tokens: int) -> List[int]:
         """Allocate pages for a new request covering `num_tokens`."""
+        return self.allocate_pages(rid, self.pages_needed(num_tokens))
+
+    def allocate_pages(self, rid: int, n_pages: int) -> List[int]:
+        """Allocate an explicit page COUNT (the GLA paged-state path:
+        one state page per request, whatever its token count)."""
         if rid in self._tables:
             raise ValueError(f"request {rid} already holds pages")
-        pages = self._take(self.pages_needed(num_tokens))
+        pages = self._take(n_pages)
         self._tables[rid] = pages
         return pages
 
@@ -157,7 +162,9 @@ class PagePool:
 
 def num_pages_for_budget(cfg, budget_bytes: int, page_size: int) -> int:
     """Arena pages (total, incl. the engine's reserved sink page) that
-    fit an HBM byte budget for this config."""
+    fit an HBM byte budget for this config.  `serve.cache.page_bytes`
+    prices a page per backend: KV rows for softmax, one whole recurrent
+    state for gla — so the same policy sizes both arena layouts."""
     from repro.serve.cache import page_bytes
     return budget_bytes // page_bytes(cfg, page_size)
 

@@ -1,0 +1,130 @@
+"""Shared test oracles and factories (consolidated test harness).
+
+Three things every suite used to re-implement live here once:
+
+  backend_cfg()            the tiny one-layer ModelConfig used for
+                           backend-level tests (+ with_impl to swap the
+                           kernel impl)
+  assert_impl_parity()     the kernel family x impl parity assert loop
+                           (compare every impl's output against the
+                           first one, with a named error message)
+  run_engine_greedy() /    the engine greedy-identity harness: build an
+  assert_engine_identity() Engine, submit the canonical prompt set, run
+                           to completion, compare rid -> tokens dicts
+
+jax-version guards for the env-dependent suites (distributed / dryrun /
+checkpoint need `jax.sharding.AxisType`) also live here so every skip
+states the same reason.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import LACfg, ModelConfig
+
+# jax.sharding.AxisType landed after 0.4.x; launch/mesh.py and
+# launch/elastic.py (and everything importing them) need it
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+requires_axis_type = pytest.mark.skipif(
+    not HAS_AXIS_TYPE,
+    reason="jax.sharding.AxisType unavailable on this jax version "
+           "(launch/mesh.py + launch/elastic.py need it)")
+
+# the canonical engine-test prompt set: ragged lengths, none dividing
+# the usual prefill windows
+PROMPTS = [list(range(3, 10)), list(range(5, 17)), list(range(4, 8)),
+           list(range(6, 14)), list(range(3, 12))]
+
+
+def prompts():
+    return [list(p) for p in PROMPTS]
+
+
+# ---------------------------------------------------------------------------
+# Config factory
+# ---------------------------------------------------------------------------
+
+def backend_cfg(backend: str = "linear", **kw) -> ModelConfig:
+    """The tiny one-layer config backend-level tests share: d_model 32,
+    4 query / 2 KV heads (GQA), xla kernel impl, chunk 8.
+
+    `backend` is an attention_backend name ("linear" | "gla" |
+    "softmax"); pass mixer="mla"/"mamba2" (plus their cfg blocks) via
+    kw for the non-attention mixers.  Any field overrides via kw.
+    """
+    base = dict(name="t", family="dense", num_layers=1, d_model=32,
+                num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                attention_backend=backend,
+                la=LACfg(chunk=8, backend="xla"))
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def with_impl(cfg: ModelConfig, impl: str) -> ModelConfig:
+    """cfg with its kernel impl (cfg.la.backend) swapped."""
+    import dataclasses
+    return dataclasses.replace(
+        cfg, la=dataclasses.replace(cfg.la, backend=impl))
+
+
+# ---------------------------------------------------------------------------
+# Kernel family x impl parity loop
+# ---------------------------------------------------------------------------
+
+def assert_impl_parity(fn, impls, *, rtol=2e-4, atol=2e-4, label=""):
+    """Run `fn(impl)` for every impl and assert each output matches the
+    first impl's (the reference — conventionally "xla").  `fn` may
+    return one array or a tuple/list of arrays."""
+    ref_impl, ref_out = impls[0], fn(impls[0])
+    ref_leaves = jax.tree.leaves(ref_out)
+    for impl in impls[1:]:
+        got_leaves = jax.tree.leaves(fn(impl))
+        # zip truncates: an impl returning FEWER outputs (e.g. a bwd
+        # missing the log-decay gradient) must fail, not silently pass
+        assert len(got_leaves) == len(ref_leaves), (
+            f"{label}: {impl} returned {len(got_leaves)} outputs, "
+            f"{ref_impl} returned {len(ref_leaves)}")
+        for i, (got, want) in enumerate(zip(got_leaves, ref_leaves)):
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32), np.asarray(want, np.float32),
+                rtol=rtol, atol=atol,
+                err_msg=f"{label}[{i}]: {impl} != {ref_impl}")
+
+
+# ---------------------------------------------------------------------------
+# Engine greedy-identity harness
+# ---------------------------------------------------------------------------
+
+def run_engine_greedy(cfg, params, *, max_new: int = 6, max_len: int = 64,
+                      reqs=None, **engine_kw):
+    """Build an Engine, submit the canonical prompts (or `reqs`, a list
+    of (rid, prompt, max_new) tuples), drain it, and return
+    (rid -> generated tokens, engine).  eos_id defaults to -1 so runs
+    always produce exactly max_new tokens (deterministic comparisons).
+    """
+    from repro.serve.engine import Engine, Request
+    engine_kw.setdefault("eos_id", -1)
+    eng = Engine(cfg, params, max_len=max_len, **engine_kw)
+    if reqs is None:
+        reqs = [(rid, p, max_new) for rid, p in enumerate(prompts())]
+    for rid, prompt, mn in reqs:
+        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=mn))
+    return eng.run(), eng
+
+
+def assert_engine_identity(cfg, params, base_kw: dict, *variant_kws,
+                           max_new: int = 6, max_len: int = 64):
+    """Greedy engine outputs must be token-identical across engine
+    configurations (chunked vs one-shot prefill, paged vs contiguous
+    cache, kernel impls...).  Returns the base run's rid -> tokens."""
+    base, _ = run_engine_greedy(cfg, params, max_new=max_new,
+                                max_len=max_len, **base_kw)
+    for kw in variant_kws:
+        got, _ = run_engine_greedy(cfg, params, max_new=max_new,
+                                   max_len=max_len, **kw)
+        assert got == base, (
+            f"engine outputs diverged for {kw} vs {base_kw}: "
+            f"{got} != {base}")
+    return base

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers import requires_axis_type
 from repro.checkpoint import store
 
 
@@ -68,6 +69,7 @@ def test_structure_mismatch_rejected(tmp_path):
         store.restore(str(tmp_path), {"only": jnp.zeros(3)})
 
 
+@requires_axis_type
 def test_restore_with_shardings(tmp_path):
     """Elastic path: leaves land with the sharding passed at restore."""
     from jax.sharding import NamedSharding, PartitionSpec as P

@@ -7,11 +7,18 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.configs.registry import ARCHS, get_config
-from repro.distributed import compression
-from repro.distributed.sharding import batch_spec, param_spec
-from repro.distributed.zero import moment_spec
-from repro.launch import elastic
+from helpers import HAS_AXIS_TYPE
+
+if not HAS_AXIS_TYPE:
+    pytest.skip("jax.sharding.AxisType unavailable on this jax version "
+                "(launch/elastic.py imports it at module scope)",
+                allow_module_level=True)
+
+from repro.configs.registry import ARCHS, get_config  # noqa: E402
+from repro.distributed import compression  # noqa: E402
+from repro.distributed.sharding import batch_spec, param_spec  # noqa: E402
+from repro.distributed.zero import moment_spec  # noqa: E402
+from repro.launch import elastic  # noqa: E402
 
 
 class FakeMesh:

@@ -13,6 +13,12 @@ import sys
 
 import pytest
 
+from helpers import requires_axis_type
+
+# every test here subprocess-runs launch/dryrun.py, which imports
+# launch/mesh.py (jax.sharding.AxisType) — skip the module on old jax
+pytestmark = requires_axis_type
+
 _SCRIPT = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers import assert_impl_parity
 from repro.core.softmax import softmax_chunked
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_bwd_pallas, \
@@ -154,27 +155,16 @@ def _grads(fn, q, k, v, w):
 @pytest.mark.parametrize("n", [32, 45])
 def test_flash_backward_parity(group, n):
     """softmax x pallas_interpret gradients == autodiff of the XLA scan
-    == autodiff of the grouped oracle, across group sizes and odd N."""
+    == autodiff of the grouped oracle, across group sizes and odd N
+    (the ref "impl" IS autodiff of the oracle through the registry)."""
     b, h, d = 2, 4, 16
     q, k, v = _qkv(6, b, h, h // group, n, d)
     w = jax.random.normal(jax.random.PRNGKey(7), q.shape)
-
-    g_pl = _grads(lambda q, k, v: ops.softmax_attention(
-        q, k, v, chunk=16, backend="pallas_interpret"), q, k, v, w)
-    g_x = _grads(lambda q, k, v: ops.softmax_attention(
-        q, k, v, chunk=16, backend="xla"), q, k, v, w)
-    g_ref = _grads(lambda q, k, v: ref.softmax_ref(q, k, v), q, k, v, w)
-
-    for name, a, b_ in zip(("dq", "dk", "dv"), g_pl, g_x):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
-                                   rtol=2e-4, atol=2e-4,
-                                   err_msg=f"{name}: pallas != xla "
-                                           f"(g={group}, n={n})")
-    for name, a, b_ in zip(("dq", "dk", "dv"), g_pl, g_ref):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
-                                   rtol=2e-4, atol=2e-4,
-                                   err_msg=f"{name}: pallas != ref "
-                                           f"(g={group}, n={n})")
+    assert_impl_parity(
+        lambda impl: _grads(lambda q, k, v: ops.softmax_attention(
+            q, k, v, chunk=16, backend=impl), q, k, v, w),
+        ["xla", "pallas_interpret", "ref"], rtol=2e-4, atol=2e-4,
+        label=f"flash grads (g={group}, n={n})")
 
 
 def test_flash_backward_unequal_blocks():

@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers import assert_impl_parity
 from repro.core import ssd as cssd
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels import ssd as kssd
 
 SHAPES = [
@@ -25,19 +26,16 @@ def _make(b, h, n, dk, dv, seed=0):
 
 
 @pytest.mark.parametrize("shape", SHAPES)
-def test_chunked_vs_ref(shape):
+def test_fwd_impl_parity(shape):
+    """Every registered ssd impl (xla scan, pallas-interpret kernel,
+    quadratic oracle) agrees on the forward (consolidated from the old
+    per-impl vs-ref tests, through the registry entry point)."""
     b, h, n, dk, dv, c = shape
     q, k, v, ld = _make(b, h, n, dk, dv)
-    o_ref = ref.ssd_ref(q, k, v, ld)
-    o, _ = cssd.ssd_fwd_chunked(q, k, v, ld, chunk=c)
-    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
-                               rtol=2e-4, atol=2e-4)
-
-
-@pytest.mark.parametrize("shape", SHAPES)
-def test_pallas_vs_ref(shape):
-    b, h, n, dk, dv, c = shape
-    q, k, v, ld = _make(b, h, n, dk, dv)
+    assert_impl_parity(
+        lambda impl: ops.ssd_causal(q, k, v, ld, c, impl),
+        ["xla", "pallas_interpret", "ref"], rtol=2e-4, atol=2e-4,
+        label=f"ssd fwd {shape}")
     o_ref = ref.ssd_ref(q, k, v, ld)
     o = kssd.ssd_fwd_pallas(q, k, v, ld, chunk=c, interpret=True)
     np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),

@@ -12,11 +12,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers import prompts, run_engine_greedy
 from repro.configs.registry import get_config
 from repro.kernels import ops
 from repro.kernels.paged_attention import gather_pages
 from repro.models import model as mdl
-from repro.serve.cache import page_bytes, per_slot_bytes
+from repro.serve.cache import page_bytes, per_slot_bytes, \
+    state_page_bytes
 from repro.serve.engine import Engine, Request
 from repro.serve.paging import PagedAdmission, PagePool, PoolExhausted
 from repro.serve.scheduler import ByteBudget, RequestState
@@ -28,9 +30,14 @@ def _softmax_cfg(**over):
     return dataclasses.replace(cfg, **over) if over else cfg
 
 
-def _prompts():
-    return [list(range(3, 10)), list(range(5, 17)), list(range(4, 8)),
-            list(range(6, 14)), list(range(3, 12))]
+def _gla_cfg(**over):
+    cfg = dataclasses.replace(get_config("qwen2.5-3b", smoke=True),
+                              attention_backend="gla")
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+# the canonical engine-harness prompt set now lives in tests/helpers.py
+_prompts = prompts
 
 
 # ---------------------------------------------------------------------------
@@ -208,11 +215,8 @@ def test_softmax_decode_registry_matches_full_attention(rng):
 # Engine-level identity + admission
 # ---------------------------------------------------------------------------
 
-def _run_engine(cfg, params, **kw):
-    eng = Engine(cfg, params, max_len=64, eos_id=-1, **kw)
-    for rid, p in enumerate(_prompts()):
-        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=6))
-    return eng.run(), eng
+# helpers.run_engine_greedy IS the old _run_engine harness, shared now
+_run_engine = run_engine_greedy
 
 
 @pytest.mark.parametrize("kernel", ["xla", "pallas_interpret"])
@@ -280,6 +284,91 @@ def test_engine_paged_rejects_misconfigured_knobs():
     pol = PagedAdmission(1 << 20, page_size=8)
     with pytest.raises(ValueError, match="drop the engine kwargs"):
         Engine(cfg, None, max_len=32, policy=pol, page_size=8)
+
+
+# ---------------------------------------------------------------------------
+# Paged recurrent state (gla) — the first non-KV layout through PagePool
+# ---------------------------------------------------------------------------
+
+def test_engine_paged_gla_state_matches_contiguous(rng):
+    """ISSUE 5 acceptance: greedy decode with the GLA recurrent state
+    living in a shared page arena (one state page per slot) is
+    token-identical to the contiguous GLAState path — one-shot and
+    chunked prefill — and slots cycling through reused pages never
+    inherit a stale state (5 requests drain through 2 state pages, so
+    reuse-without-zeroing would corrupt).  The paged runs set
+    kernel_backend="pallas_interpret" to pin that a non-default impl
+    CONFIG flows through the gla engine path (serving prefill/decode
+    are the XLA recurrence for every impl, like the linear backend —
+    impl parity of the kernels themselves is test_kernels_gla's job)."""
+    cfg = _gla_cfg()
+    params = mdl.init_params(cfg, rng)
+    base, _ = _run_engine(cfg, params, max_slots=2)
+    paged, eng = _run_engine(cfg, params, max_slots=2, page_size=8,
+                             kernel_backend="pallas_interpret")
+    assert paged == base
+    chunked, _ = _run_engine(cfg, params, max_slots=2, page_size=8,
+                             prefill_chunk=5,
+                             kernel_backend="pallas_interpret")
+    assert chunked == base
+    stats = eng.page_stats()
+    assert stats["pages_in_use"] == 0
+    assert stats["free_pages"] == stats["num_pages"] == 2  # 1/slot
+
+
+def test_gla_state_page_accounting():
+    """A gla page prices one whole (Hkv, Dk, Dv+1) + (Hkv, Dv+1) f32
+    state across layers — page_size-independent — and matches the
+    eval_shape-exact arena growth of one extra page."""
+    import repro.serve.cache as sc
+    from repro.configs.base import PagingCfg
+    cfg = _gla_cfg(paging=PagingCfg(page_size=16, num_pages=4))
+    cfg2 = _gla_cfg(paging=PagingCfg(page_size=16, num_pages=5))
+    grow = sc.cache_bytes(cfg2, 1, 64) - sc.cache_bytes(cfg, 1, 64)
+    assert grow == state_page_bytes(cfg) == page_bytes(cfg, 16)
+    # page_size is a KV-row notion; a state page ignores it
+    assert page_bytes(cfg, 1) == page_bytes(cfg, 512)
+    hd = cfg.resolved_head_dim
+    want = (cfg.num_kv_heads * ((hd + 1) * hd + (hd + 1))
+            * 4 * cfg.num_layers)
+    assert state_page_bytes(cfg) == want
+
+
+def test_gla_paged_admission_charges_one_page_per_request(rng):
+    """PagedAdmission prices the gla arena in STATE pages: a budget of
+    ~2.5 state pages buys exactly 2 (incl. the sink), each request
+    needs ONE page whatever its token count — so a 3rd concurrent
+    request must wait for a page, not for tokens."""
+    cfg = _gla_cfg()
+    budget = state_page_bytes(cfg) * 5 // 2
+    pol = PagedAdmission(budget, page_size=8, max_slots=4)
+    assert pol.resolve_num_pages(cfg) == 2       # 1 allocatable + sink
+    params = mdl.init_params(cfg, rng)
+    # one allocatable state page: strict-FIFO one-at-a-time service
+    done, eng = _run_engine(cfg, params, policy=pol)
+    assert sorted(done) == [0, 1, 2, 3, 4]
+    assert eng.pool.free_pages == eng.pool.num_pages == 1
+    # the contiguous run produces the same tokens (admission changes
+    # scheduling, never results)
+    base, _ = _run_engine(cfg, params, max_slots=4)
+    assert done == base
+
+
+def test_gla_paged_long_prompt_still_one_page(rng):
+    """The O(D^2) story page-granular: a LONG prompt needs the same one
+    state page as a short one (KV paging would need prompt/page_size
+    pages), so a budget worth ~1 state page serves a 512-token prompt."""
+    cfg = _gla_cfg()
+    pol = PagedAdmission(state_page_bytes(cfg) * 2, page_size=8,
+                         max_slots=1)
+    params = mdl.init_params(cfg, rng)
+    eng = Engine(cfg, params, max_len=1024, policy=pol, eos_id=-1,
+                 prefill_chunk=128)
+    prompt = [3 + (i % 200) for i in range(512)]
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=2))
+    done = eng.run()
+    assert len(done[0]) == 2
+    assert eng.pool.free_pages == eng.pool.num_pages == 1
 
 
 def test_paged_admits_long_context_bytebudget_refuses(rng):

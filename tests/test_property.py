@@ -13,7 +13,12 @@ Invariants of normalized linear attention (paper Eqs. 4-9, 22):
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package "
+                         "(pip install hypothesis)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import chunked
 from repro.core.linear_attention import LACfg, la_attention

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers import prompts, run_engine_greedy
 from repro.configs.registry import ARCHS, get_config
 from repro.models import model as mdl
 from repro.models.frontends import vision_positions_stub
@@ -70,11 +71,12 @@ def test_cache_bytes_comparison_full_scale():
     assert la * 100 < kv, (la, kv)
 
 
-@pytest.mark.parametrize("backend", ["linear", "softmax"])
+@pytest.mark.parametrize("backend", ["linear", "gla", "softmax"])
 def test_engine_matches_sequential(backend, rng):
     """Continuous batching must not change any request's output — for
-    the O(D^2)-state linear backend AND the KV-cache softmax baseline
-    (slots sit at different depths, exercising per-slot positions)."""
+    the O(D^2)-state linear and decay-gated (gla) backends AND the
+    KV-cache softmax baseline (slots sit at different depths,
+    exercising per-slot positions)."""
     import dataclasses
     cfg = dataclasses.replace(get_config("qwen2.5-3b", smoke=True),
                               attention_backend=backend)
@@ -146,28 +148,22 @@ def test_chunked_prefill_exact(arch, backend, rng):
 # Serving API v2: chunked prefill, per-request sampling, admission control
 # ---------------------------------------------------------------------------
 
-def _prompts():
-    return [list(range(3, 10)), list(range(5, 17)), list(range(4, 8)),
-            list(range(6, 14)), list(range(3, 12))]
+# the canonical engine-harness prompt set now lives in tests/helpers.py
+_prompts = prompts
 
 
-@pytest.mark.parametrize("backend", ["linear", "softmax"])
-def test_engine_chunked_prefill_matches_oneshot(backend, rng):
+@pytest.mark.parametrize("backend", ["linear", "gla", "softmax"])
+def test_engine_chunked_prefill_matches_oneshot(backend, rng,
+                                                engine_harness):
     """Greedy engine outputs must be identical whether prompts prefill
     one-shot or window-by-window into the slot's cache region (windows
     deliberately don't divide the prompt lengths)."""
     cfg = dataclasses.replace(get_config("qwen2.5-3b", smoke=True),
                               attention_backend=backend)
     params = mdl.init_params(cfg, rng)
-
-    def run(prefill_chunk):
-        eng = Engine(cfg, params, max_slots=2, max_len=64, eos_id=-1,
-                     prefill_chunk=prefill_chunk)
-        for rid, p in enumerate(_prompts()):
-            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=6))
-        return eng.run()
-
-    assert run(None) == run(5)
+    engine_harness(cfg, params,
+                   dict(max_slots=2),
+                   dict(max_slots=2, prefill_chunk=5))
 
 
 def test_engine_chunked_prefill_matches_oneshot_flash_kernel(rng):
@@ -181,12 +177,11 @@ def test_engine_chunked_prefill_matches_oneshot_flash_kernel(rng):
     params = mdl.init_params(cfg, rng)
 
     def run(prefill_chunk, kernel):
-        eng = Engine(cfg, params, max_slots=2, max_len=64, eos_id=-1,
-                     prefill_chunk=prefill_chunk, kernel_backend=kernel)
+        done, eng = run_engine_greedy(cfg, params, max_slots=2,
+                                      prefill_chunk=prefill_chunk,
+                                      kernel_backend=kernel)
         assert eng.cfg.la.backend == kernel
-        for rid, p in enumerate(_prompts()):
-            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=6))
-        return eng.run()
+        return done
 
     flash_one = run(None, "pallas_interpret")
     flash_chunked = run(5, "pallas_interpret")
