@@ -29,9 +29,18 @@ paper's scaling claims (slopes) and memory ratios:
                        per-slot decode, at context N ∈ {1k, 8k}; emits
                        artifacts/BENCH_paged.json with an interpret-mode
                        parity cell (CI asserts on it)
+  tune               — autotune sweep per kernel family (repro.tune):
+                       every legal tile candidate measured through the
+                       production dispatch path; winners persist to
+                       artifacts/tune_cache.json, the full candidate x
+                       roofline record to artifacts/BENCH_autotune.json
   roofline           — prints the 40-cell tables from artifacts/dryrun
 
-Every entry prints `name,metric,value` CSV rows.
+Every entry prints `name,metric,value` CSV rows; timing goes through
+repro.tune.timer.measure (compile-excluded, device-synchronized,
+median-of-k) everywhere, and the flash/gla/paged/tune JSON artifacts
+carry a roofline cell (achieved-vs-roofline fraction, or null with the
+denominator still present for skipped cells) per measurement.
 
     PYTHONPATH=src python -m benchmarks.run [entry ...]
 """
@@ -46,12 +55,20 @@ import numpy as np
 
 
 def _t(fn, *args, reps=5):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+    """Median wall-clock seconds via the repo's ONE timing methodology
+    (repro.tune.timer): warmup excluded, every rep device-synchronized."""
+    from repro.tune.timer import measure
+    return measure(fn, *args, reps=reps, warmup=1).median_s
+
+
+def _roof(family, shape, t_s=None, op="fwd"):
+    """Roofline cell for one bench measurement: structural flops/bytes,
+    the roofline time denominator, and achieved_frac (None when the
+    cell was skipped — the denominator is still present, which is what
+    bench_check / CI assert on)."""
+    from repro.analysis.roofline import attention_costs, kernel_roofline
+    costs = attention_costs(family, shape, op=op)
+    return kernel_roofline(costs["flops"], costs["bytes"], time_s=t_s)
 
 
 def _qkv(b, h, n, d, key=0):
@@ -298,11 +315,14 @@ def bench_flash(json_path: str = "artifacts/BENCH_flash.json"):
 
     for n in (1024, 4096):
         q, k, v = qkv(n)
+        shape = {"b": b, "h": h, "hkv": hkv, "n": n, "d": d}
         for impl in ("xla", "pallas"):
             if impl not in impls:
                 record["cells"].append({"impl": impl, "n": n,
                                         "fwd_ms": None, "fwdbwd_ms": None,
-                                        "skipped": "requires TPU"})
+                                        "skipped": "requires TPU",
+                                        "roofline": _roof("softmax",
+                                                          shape)})
                 continue
             fwd = jax.jit(lambda q, k, v, impl=impl: ops.softmax_attention(
                 q, k, v, backend=impl))
@@ -313,9 +333,13 @@ def bench_flash(json_path: str = "artifacts/BENCH_flash.json"):
             t_fb = _t(fb, q, k, v, reps=3)
             print(f"flash,{impl}_fwd_ms_n{n},{t_f*1e3:.2f}")
             print(f"flash,{impl}_fwdbwd_ms_n{n},{t_fb*1e3:.2f}")
+            roof = _roof("softmax", shape, t_f)
+            print(f"flash,{impl}_roofline_frac_n{n},"
+                  f"{roof['achieved_frac']:.4f}")
             record["cells"].append({"impl": impl, "n": n,
                                     "fwd_ms": round(t_f * 1e3, 3),
-                                    "fwdbwd_ms": round(t_fb * 1e3, 3)})
+                                    "fwdbwd_ms": round(t_fb * 1e3, 3),
+                                    "roofline": roof})
 
     # interpret-mode parity cell: fwd+bwd of the flash kernel vs the
     # scan at a CPU-feasible size (this is what CI asserts on)
@@ -367,11 +391,13 @@ def bench_gla(json_path: str = "artifacts/BENCH_gla.json"):
 
     for n in (1024, 4096):
         q, k, v, ld = qkvd(n)
+        shape = {"b": b, "h": h, "hkv": hkv, "n": n, "d": d}
         for impl in ("xla", "pallas"):
             if impl not in impls:
                 record["cells"].append({"impl": impl, "n": n,
                                         "fwd_ms": None, "fwdbwd_ms": None,
-                                        "skipped": "requires TPU"})
+                                        "skipped": "requires TPU",
+                                        "roofline": _roof("gla", shape)})
                 continue
             fwd = jax.jit(lambda q, k, v, ld, impl=impl: ops.gla_causal(
                 q, k, v, ld, 1.0, 1.0, 128, impl))
@@ -383,9 +409,13 @@ def bench_gla(json_path: str = "artifacts/BENCH_gla.json"):
             t_fb = _t(fb, q, k, v, ld, reps=3)
             print(f"gla,{impl}_fwd_ms_n{n},{t_f*1e3:.2f}")
             print(f"gla,{impl}_fwdbwd_ms_n{n},{t_fb*1e3:.2f}")
+            roof = _roof("gla", shape, t_f)
+            print(f"gla,{impl}_roofline_frac_n{n},"
+                  f"{roof['achieved_frac']:.4f}")
             record["cells"].append({"impl": impl, "n": n,
                                     "fwd_ms": round(t_f * 1e3, 3),
-                                    "fwdbwd_ms": round(t_fb * 1e3, 3)})
+                                    "fwdbwd_ms": round(t_fb * 1e3, 3),
+                                    "roofline": roof})
 
     # interpret-mode parity cell: fwd+bwd of the pallas GLA kernel vs
     # the scan at a CPU-feasible size (this is what CI asserts on)
@@ -445,20 +475,24 @@ def bench_paged(json_path: str = "artifacts/BENCH_paged.json"):
     for n in (1024, 8192):
         q, kp, vp, pt, lens = setup(n)
         kc, vc = gather_pages(kp, pt), gather_pages(vp, pt)
+        shape = {"b": b, "h": h, "hkv": hkv, "n": n, "d": d,
+                 "page_size": ps}
         cells = [
-            ("contiguous_xla", jax.jit(lambda q, kc=kc, vc=vc, lens=lens:
-                                       ops.softmax_decode(q, kc, vc, lens,
-                                                          backend="xla"))),
-            ("paged_xla", jax.jit(lambda q, kp=kp, vp=vp, pt=pt, lens=lens:
-                                  ops.paged_attention(q, kp, vp, pt, lens,
-                                                      backend="xla"))),
+            ("contiguous_xla", "softmax_decode",
+             jax.jit(lambda q, kc=kc, vc=vc, lens=lens:
+                     ops.softmax_decode(q, kc, vc, lens, backend="xla"))),
+            ("paged_xla", "paged",
+             jax.jit(lambda q, kp=kp, vp=vp, pt=pt, lens=lens:
+                     ops.paged_attention(q, kp, vp, pt, lens,
+                                         backend="xla"))),
         ]
-        for name, fn in cells:
+        for name, family, fn in cells:
             t = _t(fn, q, reps=5)
             print(f"paged,{name}_decode_tokens_per_s_n{n},{b/t:.1f}")
             record["cells"].append({"impl": name, "n": n,
                                     "decode_ms": round(t * 1e3, 3),
-                                    "tokens_per_s": round(b / t, 1)})
+                                    "tokens_per_s": round(b / t, 1),
+                                    "roofline": _roof(family, shape, t)})
         if on_tpu:
             fn = jax.jit(lambda q, kp=kp, vp=vp, pt=pt, lens=lens:
                          ops.paged_attention(q, kp, vp, pt, lens,
@@ -467,12 +501,14 @@ def bench_paged(json_path: str = "artifacts/BENCH_paged.json"):
             print(f"paged,paged_pallas_decode_tokens_per_s_n{n},{b/t:.1f}")
             record["cells"].append({"impl": "paged_pallas", "n": n,
                                     "decode_ms": round(t * 1e3, 3),
-                                    "tokens_per_s": round(b / t, 1)})
+                                    "tokens_per_s": round(b / t, 1),
+                                    "roofline": _roof("paged", shape, t)})
         else:
             record["cells"].append({"impl": "paged_pallas", "n": n,
                                     "decode_ms": None,
                                     "tokens_per_s": None,
-                                    "skipped": "requires TPU"})
+                                    "skipped": "requires TPU",
+                                    "roofline": _roof("paged", shape)})
 
     # interpret-mode parity cell (what CI asserts on): paged pallas ==
     # paged xla == contiguous decode on the gathered layout
@@ -496,6 +532,43 @@ def bench_paged(json_path: str = "artifacts/BENCH_paged.json"):
         raise SystemExit(f"paged interpret parity failed: {err}")
 
 
+def bench_tune(json_path: str = "artifacts/BENCH_autotune.json"):
+    """Autotune sweep over every kernel family (repro.tune): measures
+    each legal tile candidate through the production dispatch path,
+    writes winners to artifacts/tune_cache.json, and emits the full
+    candidate x roofline record to artifacts/BENCH_autotune.json.
+
+    On CPU the sweep runs the pallas kernels in interpret mode at small
+    N (the winners are interpret-wall-clock, tagged device_kind=cpu and
+    never consulted on TPU); on TPU it sweeps the compiled kernels."""
+    import json
+    import os
+
+    from repro.tune.cache import TuningCache
+    from repro.tune.sweep import sweep_shape
+
+    on_tpu = jax.default_backend() == "tpu"
+    impl = "pallas" if on_tpu else "pallas_interpret"
+    n = 4096 if on_tpu else 256
+    shape = {"b": 1, "h": 4, "hkv": 2, "n": n, "d": 32}
+    cache = TuningCache.load("artifacts/tune_cache.json")
+    records = []
+    for family in ("linear", "softmax", "gla", "ssd", "paged"):
+        fshape = dict(shape, page_size=16) if family == "paged" else shape
+        records.append(sweep_shape(family, impl, fshape, op="fwd",
+                                   reps=3, cache=cache))
+        best = records[-1]["best"]
+        print(f"tune,{family}_{impl}_best,{best['tiles']}")
+        print(f"tune,{family}_{impl}_best_ms,{best['median_ms']}")
+    cache.save()
+    print(f"tune,cache_entries,{len(cache)}")
+    os.makedirs(os.path.dirname(json_path), exist_ok=True)
+    with open(json_path, "w") as f:
+        json.dump({"device": jax.default_backend(), "sweeps": records},
+                  f, indent=1)
+    print(f"tune,json_artifact,{json_path}")
+
+
 def bench_roofline():
     """Emit the roofline tables from the dry-run artifacts."""
     from repro.analysis.roofline import format_table, load_artifacts
@@ -515,7 +588,7 @@ def bench_roofline():
 BENCHES = {"table1": bench_table1, "fig2": bench_fig2, "fig3": bench_fig3,
            "fig4": bench_fig4, "fig5": bench_fig5, "serve": bench_serve,
            "flash": bench_flash, "gla": bench_gla, "paged": bench_paged,
-           "roofline": bench_roofline}
+           "tune": bench_tune, "roofline": bench_roofline}
 
 
 def main() -> None:

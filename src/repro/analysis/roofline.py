@@ -25,6 +25,17 @@ PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # bytes/s / chip
 LINK_BW = 50e9           # bytes/s / link (ICI)
 
+# per-device-kind (jax.default_backend()) peaks for the KERNEL-level
+# roofline below.  "cpu" is a ballpark host figure (a few AVX cores +
+# dual-channel DRAM) — on CPU the absolute fraction is not a claim, but
+# the denominator keeps BENCH_*.json cells structurally identical
+# across devices so CI can assert on their presence everywhere.
+DEVICE_SPECS = {
+    "tpu": {"peak_flops": PEAK_FLOPS, "mem_bw": HBM_BW},
+    "gpu": {"peak_flops": 165e12, "mem_bw": 768e9},   # A6000 (paper hw)
+    "cpu": {"peak_flops": 100e9, "mem_bw": 20e9},
+}
+
 
 @dataclasses.dataclass
 class Roofline:
@@ -71,6 +82,85 @@ class Roofline:
         d["bound_time_s"] = self.bound_time
         d["roofline_fraction"] = self.roofline_fraction
         return d
+
+
+def attention_costs(family: str, shape: dict, op: str = "fwd",
+                    itemsize: int = 4) -> dict:
+    """Structural flops/bytes of one attention kernel call.
+
+    `shape` uses the dispatch-layer keys (kernels/ops.py): b, h, hkv, n,
+    d (+ page_size for paged).  Bytes are the IDEAL streaming traffic —
+    each operand crosses HBM once (what the Pallas kernels achieve by
+    construction); flops count multiply-adds as 2.  `op` scales for the
+    backward: fwdbwd ≈ 3.5x fwd for the recomputation-based backwards
+    (2 extra matmuls per forward matmul, plus the recompute), the
+    conventional flash accounting.
+    """
+    b, h, n, d = shape["b"], shape["h"], shape["n"], shape["d"]
+    hkv = shape.get("hkv", h)
+    if family in ("linear", "gla", "ssd"):
+        # chunked scan: intra-chunk scores+weighting ~ O(n c d) and
+        # state update/query ~ O(n d^2); c is a tile choice, so charge
+        # the tile-independent O(n d^2) term (the d^2 state is the
+        # family's defining cost, paper Sec. 4)
+        flops = 2.0 * b * h * n * (2 * d * d)
+        nbytes = itemsize * (2.0 * b * h * n * d          # q, o
+                             + 2.0 * b * hkv * n * d)     # k, v
+        if family in ("gla", "ssd"):
+            nbytes += itemsize * b * hkv * n              # log-decay
+    elif family in ("softmax", "softmax_decode"):
+        causal_frac = 0.5 if family == "softmax" else 1.0
+        flops = 2.0 * 2.0 * b * h * n * n * d * causal_frac  # qk^T + pv
+        if family == "softmax_decode":
+            flops = 2.0 * 2.0 * b * h * n * d             # one query row
+        nbytes = itemsize * (2.0 * b * h * (n if family == "softmax"
+                                            else 1) * d   # q, o
+                             + 2.0 * b * hkv * n * d)     # k, v
+    elif family == "paged":
+        # one-token decode: n here is pmax * page_size (the padded
+        # context); every mapped page is read once
+        flops = 2.0 * 2.0 * b * h * n * d
+        nbytes = itemsize * (2.0 * b * h * d              # q, o rows
+                             + 2.0 * b * hkv * n * d)     # K/V pages
+    else:
+        raise KeyError(f"no cost model for kernel family {family!r}")
+    if op == "bwd":
+        flops, nbytes = 2.5 * flops, 2.0 * nbytes
+    elif op == "fwdbwd":
+        flops, nbytes = 3.5 * flops, 3.0 * nbytes
+    elif op != "fwd":
+        raise ValueError(f"op must be fwd|bwd|fwdbwd, got {op!r}")
+    return {"flops": flops, "bytes": nbytes}
+
+
+def kernel_roofline(flops: float, nbytes: float, time_s=None,
+                    device=None) -> dict:
+    """Roofline cell for one measured (or unmeasured) kernel call.
+
+    t_roofline_s = max(flops/peak, bytes/bw) on `device` (a
+    DEVICE_SPECS key; default jax.default_backend()).  achieved_frac =
+    t_roofline_s / time_s — 1.0 means running AT the roofline, smaller
+    is further away; None when no measurement exists (skipped cells),
+    but the denominator is always present so artifact consumers can
+    rely on the schema.
+    """
+    if device is None:
+        import jax
+        device = jax.default_backend()
+    spec = DEVICE_SPECS.get(device, DEVICE_SPECS["cpu"])
+    t_compute = flops / spec["peak_flops"]
+    t_memory = nbytes / spec["mem_bw"]
+    t_roof = max(t_compute, t_memory)
+    return {
+        "device": device,
+        "flops": flops,
+        "bytes": nbytes,
+        "intensity": flops / nbytes if nbytes else 0.0,
+        "t_roofline_s": t_roof,
+        "bound": "compute" if t_compute >= t_memory else "memory",
+        "achieved_frac": (t_roof / time_s
+                          if time_s else None),
+    }
 
 
 def model_flops_for(cfg, shape) -> float:

@@ -44,6 +44,22 @@ class PagingCfg:
 
 
 @dataclasses.dataclass(frozen=True)
+class TuneCfg:
+    """Kernel autotuning opt-in (docs/autotuning.md).
+
+    When enabled, the launchers install the tuning cache at `cache_path`
+    into kernel dispatch (repro.tune.activate_from_cfg): every
+    KernelImpl wrapper then resolves its tile sizes — chunk, block_q/k,
+    pages_per_block — from swept winners instead of the static
+    kernels/defaults.py table.  A missing/empty cache file keeps
+    dispatch byte-identical to the untuned defaults.
+    """
+
+    enabled: bool = False
+    cache_path: str = "artifacts/tune_cache.json"
+
+
+@dataclasses.dataclass(frozen=True)
 class MoECfg:
     num_experts: int
     top_k: int
@@ -94,6 +110,9 @@ class ModelConfig:
     # paged-KV serving cache (softmax backend only; set by the serving
     # engine's --page-size/--num-pages, never by model presets)
     paging: Optional[PagingCfg] = None
+    # kernel autotuning opt-in (set by the launchers' --autotune flag,
+    # never by model presets; None = untuned defaults)
+    tune: Optional[TuneCfg] = None
     qkv_bias: bool = False
     # ---- block
     mlp_act: str = "swiglu"        # swiglu | gelu

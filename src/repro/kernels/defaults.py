@@ -1,0 +1,56 @@
+"""Default kernel tile sizes — the autotuner's fallback source of truth.
+
+Every Pallas kernel module in this package used to carry its own copy of
+the hand-picked block/chunk constants (128 tokens per chunk for the
+chunked-recurrence families, 128x128 q/k blocks for flash, one page per
+grid step for paged decode).  They live HERE now, in one table, for two
+reasons:
+
+  * `repro.tune` — the autotuning subsystem — needs a deterministic
+    fallback when the tuning cache has no entry for a (family, impl,
+    op, shape-bucket, dtype, device) key.  That fallback must be
+    byte-identical to the pre-autotuner behavior, so there must be
+    exactly one copy of it.
+  * the search spaces in `repro.tune.space` are defined AROUND these
+    values; keeping both in sight makes a sweep's "did it beat the
+    default" question answerable without grepping five kernel files.
+
+The table maps kernel family -> {tile parameter: default value}.  The
+parameter names are exactly the keyword arguments of the corresponding
+kernel entry points (`la_fwd_pallas(chunk=...)`,
+`flash_attention_pallas(block_q=..., block_k=...)`,
+`paged_attention_pallas(pages_per_block=...)`), and exactly the keys a
+tuning-cache entry may override at dispatch time (kernels/ops.py).
+
+Note the distinction from `ops.DEFAULT_CHUNK` (512): that is the
+CALLER-level scan granularity default recorded in `configs.base.LACfg`
+— how much work each chunked-scan iteration covers — while these are
+the KERNEL-level tile defaults used when a Pallas entry point is called
+without an explicit size.
+"""
+from __future__ import annotations
+
+DEFAULT_TILES: dict[str, dict[str, int]] = {
+    # chunked-recurrence families: tokens per sequential grid step
+    "linear": {"chunk": 128},
+    "gla": {"chunk": 128},
+    "ssd": {"chunk": 128},
+    # flash (softmax pallas): query/key block edge lengths
+    "softmax": {"block_q": 128, "block_k": 128},
+    # paged decode: KV pages fetched + processed per sequential grid step
+    "paged": {"pages_per_block": 1},
+}
+
+
+def default_tiles(family: str) -> dict[str, int]:
+    """A fresh copy of the family's default tile parameters.
+
+    Raises KeyError with the known families listed — the same contract
+    as the KernelImpl registry's unknown-name error.
+    """
+    try:
+        return dict(DEFAULT_TILES[family])
+    except KeyError:
+        raise KeyError(
+            f"no default tiles for kernel family {family!r}; known "
+            f"families: {sorted(DEFAULT_TILES)}") from None

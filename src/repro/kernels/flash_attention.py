@@ -53,8 +53,12 @@ from jax.experimental.pallas import tpu as pltpu
 _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
     or getattr(pltpu, "TPUCompilerParams")
 
+from repro.kernels.defaults import DEFAULT_TILES
+
 F32 = jnp.float32
 NEG_INF = -1e30
+_BQ = DEFAULT_TILES["softmax"]["block_q"]
+_BK = DEFAULT_TILES["softmax"]["block_k"]
 
 
 def _pad_seq(x, n_pad):
@@ -120,7 +124,7 @@ def _fwd_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
 
 
 def flash_attention_pallas(q, k, v, scale: float | None = None,
-                           block_q: int = 128, block_k: int = 128,
+                           block_q: int = _BQ, block_k: int = _BK,
                            interpret: bool = False, q_offset=None,
                            return_lse: bool = False):
     """Causal flash attention, GQA-native.
@@ -289,7 +293,7 @@ def _bwd_kv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 def flash_attention_bwd_pallas(q, k, v, o, lse, do,
                                scale: float | None = None,
-                               block_q: int = 128, block_k: int = 128,
+                               block_q: int = _BQ, block_k: int = _BK,
                                interpret: bool = False):
     """Recomputation-based flash backward from residuals {q, k, v, o, lse}.
 

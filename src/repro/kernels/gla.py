@@ -32,12 +32,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.numerics import safe_div
+from repro.kernels.defaults import DEFAULT_TILES
 
 # jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both
 _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
     or getattr(pltpu, "TPUCompilerParams")
 
 F32 = jnp.float32
+_CHUNK = DEFAULT_TILES["gla"]["chunk"]
 
 
 def _pad_seq(x, n_pad, axis: int = 2):
@@ -114,7 +116,7 @@ def _gla_fwd_kernel(q_ref, k_ref, v_ref, ld_ref, o_ref, g_ref, s_ref,
 
 
 def gla_fwd_pallas(q, k, v, log_decay, a: float, b: float,
-                   chunk: int = 128, interpret: bool = False):
+                   chunk: int = _CHUNK, interpret: bool = False):
     """Returns (o, g).  q: (B,H,N,Dk); k,v: (B,Hkv,N,D); ld: (B,Hkv,N)."""
     bsz, h, n, dk = q.shape
     dv = v.shape[-1]
@@ -245,7 +247,7 @@ def _gla_bwd_kv_kernel(q_ref, k_ref, v_ref, om_ref, h_ref, ld_ref,
 
 
 def gla_bwd_pallas(q, k, v, log_decay, o, g, omega, a: float, b: float,
-                   chunk: int = 128, interpret: bool = False):
+                   chunk: int = _CHUNK, interpret: bool = False):
     """Analytic gated backward from residuals {q, k, v, ld, o, g}.
 
     Returns (dq, dk, dv, dlog_decay)."""

@@ -38,8 +38,10 @@ _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
     or getattr(pltpu, "TPUCompilerParams")
 
 from repro.core.numerics import safe_div
+from repro.kernels.defaults import DEFAULT_TILES
 
 F32 = jnp.float32
+_CHUNK = DEFAULT_TILES["linear"]["chunk"]
 
 
 def _pad_seq(x, n_pad):
@@ -91,7 +93,7 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, g_ref, s_ref, p_ref, *,
     p_ref[...] += jnp.sum(vaug, axis=0, keepdims=True)
 
 
-def la_fwd_pallas(q, k, v, a: float, b: float, chunk: int = 128,
+def la_fwd_pallas(q, k, v, a: float, b: float, chunk: int = _CHUNK,
                   interpret: bool = False):
     """Returns (o, g).  q: (B,H,N,D); k,v: (B,Hkv,N,D)."""
     bsz, h, n, dk = q.shape
@@ -204,7 +206,7 @@ def _bwd_kv_kernel(q_ref, k_ref, v_ref, om_ref, h_ref, dk_ref, dv_ref,
 
 
 def la_bwd_pallas(q, k, v, o, g, omega, a: float, b: float,
-                  chunk: int = 128, interpret: bool = False):
+                  chunk: int = _CHUNK, interpret: bool = False):
     """Analytic backward from residuals {q,k,v,o,g}; returns (dq, dk, dv)."""
     bsz, h, n, dk = q.shape
     dv = v.shape[-1]

@@ -51,6 +51,7 @@ __all__ = [
     "softmax_decode", "paged_attention", "ssd_causal", "gla_causal",
     "gla_prefill", "gla_decode_step", "LAState", "init_state",
     "GLAState", "init_gla_state", "default_backend", "DEFAULT_CHUNK",
+    "set_tuning_cache", "get_tuning_cache", "tuned_tiles",
 ]
 
 # one chunk default everywhere (configs.base.LACfg is the schema of record):
@@ -61,6 +62,54 @@ DEFAULT_CHUNK = 512
 
 def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# ---------------------------------------------------------------------------
+# Autotuned tile resolution (repro.tune)
+#
+# Every impl wrapper below consults the process-wide tuning cache (if
+# one is installed) for its tile sizes — chunk for the chunked-scan
+# families, block_q/block_k for flash, pages_per_block for paged decode
+# — and falls back to the caller's value / kernels.defaults otherwise.
+# The lookup happens at TRACE time (shapes are concrete), so a cache
+# hit changes only the lowered kernel, never the math: each family's
+# output is invariant in its tile sizes (pinned by tests).  With no
+# cache installed (the default) dispatch is byte-identical to the
+# untuned behavior.  `repro.tune.activate` installs a cache; tests may
+# call `set_tuning_cache` directly.
+# ---------------------------------------------------------------------------
+
+_TUNING_CACHE = None  # duck-typed: anything with .lookup(...)
+
+
+def set_tuning_cache(cache):
+    """Install (or clear, with None) the tuning cache consulted by
+    kernel dispatch.  Returns the previously installed cache."""
+    global _TUNING_CACHE
+    prev, _TUNING_CACHE = _TUNING_CACHE, cache
+    return prev
+
+
+def get_tuning_cache():
+    return _TUNING_CACHE
+
+
+def tuned_tiles(family: str, impl: str, op: str, shape: dict,
+                dtype) -> dict:
+    """Cache-resolved tile overrides for one kernel launch ({} = miss)."""
+    if _TUNING_CACHE is None:
+        return {}
+    return _TUNING_CACHE.lookup(family, impl, op, shape, dtype) or {}
+
+
+def _attn_shape(q, k) -> dict:
+    """Shape-bucket inputs for the (B, H/Hkv, N, D) attention layouts."""
+    return {"b": q.shape[0], "h": q.shape[1], "hkv": k.shape[1],
+            "n": q.shape[2], "d": q.shape[3]}
+
+
+def _tile(family, impl, op, shape, dtype, param, fallback):
+    return tuned_tiles(family, impl, op, shape, dtype).get(param, fallback)
 
 
 # ---------------------------------------------------------------------------
@@ -123,20 +172,36 @@ def get_kernel(family: str, name: str) -> KernelImpl:
 # ---------------------------------------------------------------------------
 
 def _linear_xla_fwd(q, k, v, a, b, chunk):
+    chunk = _tile("linear", "xla", "fwd", _attn_shape(q, k), q.dtype,
+                  "chunk", chunk)
     o, g, _ = _chunked.la_fwd_chunked(q, k, v, a, b, chunk)
     return o, g
 
 
+def _linear_xla_bwd(q, k, v, o, g, omega, a, b, chunk):
+    chunk = _tile("linear", "xla", "bwd", _attn_shape(q, k), q.dtype,
+                  "chunk", chunk)
+    return _chunked.la_bwd_chunked(q, k, v, o, g, omega, a, b, chunk)
+
+
 def _linear_pallas_fwd(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
     def fwd(q, k, v, a, b, chunk):
         from repro.kernels import linear_attention as _pl
+        chunk = _tile("linear", impl, "fwd", _attn_shape(q, k), q.dtype,
+                      "chunk", chunk)
         return _pl.la_fwd_pallas(q, k, v, a, b, chunk, interpret=interpret)
     return fwd
 
 
 def _linear_pallas_bwd(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
     def bwd(q, k, v, o, g, omega, a, b, chunk):
         from repro.kernels import linear_attention as _pl
+        chunk = _tile("linear", impl, "bwd", _attn_shape(q, k), q.dtype,
+                      "chunk", chunk)
         return _pl.la_bwd_pallas(q, k, v, o, g, omega, a, b, chunk,
                                  interpret=interpret)
     return bwd
@@ -156,7 +221,7 @@ def _linear_ref_fwd(q, k, v, a, b, chunk):
 
 
 register_kernel("linear", "xla", fwd=_linear_xla_fwd,
-                bwd=_chunked.la_bwd_chunked)
+                bwd=_linear_xla_bwd)
 register_kernel("linear", "pallas", fwd=_linear_pallas_fwd(False),
                 bwd=_linear_pallas_bwd(False))
 register_kernel("linear", "pallas_interpret", fwd=_linear_pallas_fwd(True),
@@ -169,11 +234,22 @@ register_kernel("linear", "ref", fwd=_linear_ref_fwd)  # bwd: xla fallback
 # ---------------------------------------------------------------------------
 
 def _softmax_xla_fwd(q, k, v, causal, chunk, q_offset=None):
+    chunk = _tile("softmax", "xla", "fwd", _attn_shape(q, k), q.dtype,
+                  "chunk", chunk)
     return _softmax.softmax_chunked(q, k, v, causal=causal, chunk=chunk,
                                     q_offset=q_offset)
 
 
+def _flash_blocks(impl, op, q, k):
+    """block_q/block_k overrides for the flash kernels ({} on a miss —
+    the kernel entry points then use kernels.defaults)."""
+    tiles = tuned_tiles("softmax", impl, op, _attn_shape(q, k), q.dtype)
+    return {p: tiles[p] for p in ("block_q", "block_k") if p in tiles}
+
+
 def _softmax_pallas_fwd(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
     def fwd(q, k, v, causal, chunk, q_offset=None):
         from repro.kernels import flash_attention as _fl
         if not causal:
@@ -185,23 +261,33 @@ def _softmax_pallas_fwd(interpret):
         # head // group (no H/Hkv-fold copy), per-slot offsets stream in
         # via scalar prefetch (serving continuation prefill)
         return _fl.flash_attention_pallas(q, k, v, q_offset=q_offset,
-                                          interpret=interpret)
+                                          interpret=interpret,
+                                          **_flash_blocks(impl, "fwd",
+                                                          q, k))
     return fwd
 
 
 def _softmax_pallas_fwd_res(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
     def fwd_res(q, k, v, chunk):
         from repro.kernels import flash_attention as _fl
         return _fl.flash_attention_pallas(q, k, v, interpret=interpret,
-                                          return_lse=True)
+                                          return_lse=True,
+                                          **_flash_blocks(impl, "fwd",
+                                                          q, k))
     return fwd_res
 
 
 def _softmax_pallas_bwd(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
     def bwd(q, k, v, o, lse, omega, chunk):
         from repro.kernels import flash_attention as _fl
         return _fl.flash_attention_bwd_pallas(q, k, v, o, lse, omega,
-                                              interpret=interpret)
+                                              interpret=interpret,
+                                              **_flash_blocks(impl, "bwd",
+                                                              q, k))
     return bwd
 
 
@@ -338,11 +424,26 @@ def _paged_xla_fwd(q, k_pages, v_pages, page_table, lengths):
     return _pg.paged_attention_xla(q, k_pages, v_pages, page_table, lengths)
 
 
+def _paged_shape(q, k_pages, page_table) -> dict:
+    ps = k_pages.shape[2]
+    return {"b": q.shape[0], "h": q.shape[1], "hkv": k_pages.shape[1],
+            "n": page_table.shape[1] * ps, "d": q.shape[3],
+            "page_size": ps}
+
+
 def _paged_pallas_fwd(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
     def fwd(q, k_pages, v_pages, page_table, lengths):
+        from repro.kernels import defaults as _defaults
         from repro.kernels import paged_attention as _pg
+        ppb = _tile("paged", impl, "fwd",
+                    _paged_shape(q, k_pages, page_table), q.dtype,
+                    "pages_per_block",
+                    _defaults.DEFAULT_TILES["paged"]["pages_per_block"])
         return _pg.paged_attention_pallas(q, k_pages, v_pages, page_table,
-                                          lengths, interpret=interpret)
+                                          lengths, pages_per_block=ppb,
+                                          interpret=interpret)
     return fwd
 
 
@@ -368,22 +469,44 @@ def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
 # SSD family impls (Mamba-2 / decay-gated LA — paper Appendix B, Table 3)
 # ---------------------------------------------------------------------------
 
+def _ssd_shape(q, v) -> dict:
+    # q, k: (B, G, N, Dk) shared per group; v carries the true head count
+    return {"b": q.shape[0], "h": v.shape[1], "hkv": q.shape[1],
+            "n": q.shape[2], "d": q.shape[3]}
+
+
 def _ssd_xla_fwd(q, k, v, log_decay, chunk):
+    chunk = _tile("ssd", "xla", "fwd", _ssd_shape(q, v), q.dtype,
+                  "chunk", chunk)
     o, _ = _ssd.ssd_fwd_chunked(q, k, v, log_decay, chunk=chunk)
     return o
 
 
+def _ssd_xla_bwd(q, k, v, log_decay, o, omega, chunk):
+    chunk = _tile("ssd", "xla", "bwd", _ssd_shape(q, v), q.dtype,
+                  "chunk", chunk)
+    return _ssd.ssd_bwd_chunked(q, k, v, log_decay, o, omega, chunk)
+
+
 def _ssd_pallas_fwd(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
     def fwd(q, k, v, log_decay, chunk):
         from repro.kernels import ssd as _kssd
+        chunk = _tile("ssd", impl, "fwd", _ssd_shape(q, v), q.dtype,
+                      "chunk", chunk)
         return _kssd.ssd_fwd_pallas(q, k, v, log_decay, chunk=chunk,
                                     interpret=interpret)
     return fwd
 
 
 def _ssd_pallas_bwd(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
     def bwd(q, k, v, log_decay, o, omega, chunk):
         from repro.kernels import ssd as _kssd
+        chunk = _tile("ssd", impl, "bwd", _ssd_shape(q, v), q.dtype,
+                      "chunk", chunk)
         return _kssd.ssd_bwd_pallas(q, k, v, log_decay, o, omega,
                                     chunk=chunk, interpret=interpret)
     return bwd
@@ -394,7 +517,7 @@ def _ssd_ref_fwd(q, k, v, log_decay, chunk):
     return _ref.ssd_ref(q, k, v, log_decay)
 
 
-register_kernel("ssd", "xla", fwd=_ssd_xla_fwd, bwd=_ssd.ssd_bwd_chunked)
+register_kernel("ssd", "xla", fwd=_ssd_xla_fwd, bwd=_ssd_xla_bwd)
 register_kernel("ssd", "pallas", fwd=_ssd_pallas_fwd(False),
                 bwd=_ssd_pallas_bwd(False))
 register_kernel("ssd", "pallas_interpret", fwd=_ssd_pallas_fwd(True),
@@ -439,21 +562,38 @@ ssd_causal.defvjp(_ssd_causal_fwd, _ssd_causal_bwd)
 # ---------------------------------------------------------------------------
 
 def _gla_xla_fwd(q, k, v, log_decay, a, b, chunk):
+    chunk = _tile("gla", "xla", "fwd", _attn_shape(q, k), q.dtype,
+                  "chunk", chunk)
     o, g, _ = _gla.gla_fwd_chunked(q, k, v, log_decay, a, b, chunk)
     return o, g
 
 
+def _gla_xla_bwd(q, k, v, log_decay, o, g, omega, a, b, chunk):
+    chunk = _tile("gla", "xla", "bwd", _attn_shape(q, k), q.dtype,
+                  "chunk", chunk)
+    return _gla.gla_bwd_chunked(q, k, v, log_decay, o, g, omega, a, b,
+                                chunk)
+
+
 def _gla_pallas_fwd(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
     def fwd(q, k, v, log_decay, a, b, chunk):
         from repro.kernels import gla as _pg
+        chunk = _tile("gla", impl, "fwd", _attn_shape(q, k), q.dtype,
+                      "chunk", chunk)
         return _pg.gla_fwd_pallas(q, k, v, log_decay, a, b, chunk,
                                   interpret=interpret)
     return fwd
 
 
 def _gla_pallas_bwd(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
     def bwd(q, k, v, log_decay, o, g, omega, a, b, chunk):
         from repro.kernels import gla as _pg
+        chunk = _tile("gla", impl, "bwd", _attn_shape(q, k), q.dtype,
+                      "chunk", chunk)
         return _pg.gla_bwd_pallas(q, k, v, log_decay, o, g, omega, a, b,
                                   chunk, interpret=interpret)
     return bwd
@@ -464,7 +604,7 @@ def _gla_ref_fwd(q, k, v, log_decay, a, b, chunk):
     return _ref.gla_ref(q, k, v, log_decay, a, b, return_g=True)
 
 
-register_kernel("gla", "xla", fwd=_gla_xla_fwd, bwd=_gla.gla_bwd_chunked)
+register_kernel("gla", "xla", fwd=_gla_xla_fwd, bwd=_gla_xla_bwd)
 register_kernel("gla", "pallas", fwd=_gla_pallas_fwd(False),
                 bwd=_gla_pallas_bwd(False))
 register_kernel("gla", "pallas_interpret", fwd=_gla_pallas_fwd(True),

@@ -48,8 +48,11 @@ from jax.experimental.pallas import tpu as pltpu
 _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
     or getattr(pltpu, "TPUCompilerParams")
 
+from repro.kernels.defaults import DEFAULT_TILES
+
 F32 = jnp.float32
 NEG_INF = -1e30
+_PPB = DEFAULT_TILES["paged"]["pages_per_block"]
 
 
 # ---------------------------------------------------------------------------
@@ -91,39 +94,50 @@ def paged_attention_xla(q, k_pages, v_pages, page_table, lengths):
 # Pallas kernel
 # ---------------------------------------------------------------------------
 
-def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                   acc_ref, m_ref, l_ref, *, scale: float, pmax: int):
+def _decode_kernel(pt_ref, len_ref, q_ref, *refs, scale: float,
+                   nblk: int, ppb: int):
+    # refs = [k_0, v_0, ..., k_{ppb-1}, v_{ppb-1}, o, acc, m, l]: the
+    # pages_per_block tunable (repro.tune) widens a sequential grid step
+    # to ppb page DMAs, amortizing per-step grid overhead; ppb == 1 is
+    # byte-identical to the original one-page-per-step kernel.
+    kv_refs, o_ref = refs[:2 * ppb], refs[2 * ppb]
+    acc_ref, m_ref, l_ref = refs[2 * ppb + 1:]
     bi = pl.program_id(0)
-    pi = pl.program_id(2)
+    blk = pl.program_id(2)
     length = len_ref[bi]
-    ps = k_ref.shape[2]
+    ps = kv_refs[0].shape[2]
 
-    @pl.when(pi == 0)
+    @pl.when(blk == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    # pages at or past the slot's frontier were clamped in the index map
-    # (no DMA) and contribute nothing — skip their compute entirely
-    @pl.when(pi * ps < length)
-    def _step():
-        q = q_ref[0, 0].astype(F32)            # (1, d)
-        k = k_ref[0, 0].astype(F32)            # (ps, d)
-        v = v_ref[0, 0].astype(F32)
-        s = scale * jnp.dot(q, k.T, preferred_element_type=F32)  # (1, ps)
-        jj = pi * ps + lax.broadcasted_iota(jnp.int32, (1, ps), 1)
-        s = jnp.where(jj < length, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
-        corr = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)
-        l_ref[...] = corr * l_ref[...] + p.sum(axis=1, keepdims=True)
-        acc_ref[...] = corr * acc_ref[...] + jnp.dot(
-            p, v, preferred_element_type=F32)
-        m_ref[...] = m_new
+    for j in range(ppb):
+        pi = blk * ppb + j
+        k_ref, v_ref = kv_refs[2 * j], kv_refs[2 * j + 1]
 
-    @pl.when(pi == pmax - 1)
+        # pages at or past the slot's frontier were clamped in the index
+        # map (no DMA) and contribute nothing — skip their compute
+        @pl.when(pi * ps < length)
+        def _step(k_ref=k_ref, v_ref=v_ref, pi=pi):
+            q = q_ref[0, 0].astype(F32)            # (1, d)
+            k = k_ref[0, 0].astype(F32)            # (ps, d)
+            v = v_ref[0, 0].astype(F32)
+            s = scale * jnp.dot(q, k.T,
+                                preferred_element_type=F32)  # (1, ps)
+            jj = pi * ps + lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+            s = jnp.where(jj < length, s, NEG_INF)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+            corr = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new)
+            l_ref[...] = corr * l_ref[...] + p.sum(axis=1, keepdims=True)
+            acc_ref[...] = corr * acc_ref[...] + jnp.dot(
+                p, v, preferred_element_type=F32)
+            m_ref[...] = m_new
+
+    @pl.when(blk == nblk - 1)
     def _finalize():
         # a length-0 slot accumulates l == 0; guard the divide so the
         # retired slots of a serving batch finalize to zeros, not NaN
@@ -134,6 +148,7 @@ def _decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_attention_pallas(q, k_pages, v_pages, page_table, lengths,
                            scale: float | None = None,
+                           pages_per_block: int = _PPB,
                            interpret: bool = False):
     """Paged-KV decode through Pallas; same contract as the xla oracle.
 
@@ -141,6 +156,12 @@ def paged_attention_pallas(q, k_pages, v_pages, page_table, lengths,
     (B, Pmax) int32 arena-page ids; lengths: (B,) int32 per-slot context
     lengths.  Every page id must be a valid arena index (the engine's
     sink page backs unallocated table entries).
+
+    pages_per_block (the family's tunable tile, repro.tune): KV pages
+    streamed + processed per sequential grid step.  Arena pages are not
+    contiguous, so a wider block cannot be one BlockSpec; instead each
+    of the ppb pages rides in as its own scalar-prefetched input ref and
+    the kernel walks them within the step.  Output is invariant in it.
     """
     b, h, nq, d = q.shape
     assert nq == 1, f"paged_attention is a decode kernel (nq={nq})"
@@ -148,37 +169,50 @@ def paged_attention_pallas(q, k_pages, v_pages, page_table, lengths,
     assert h % hkv == 0, (h, hkv)
     group = h // hkv
     pmax = page_table.shape[1]
+    ppb = max(1, min(pages_per_block, pmax))
+    nblk = -(-pmax // ppb)
     scale = (1.0 / d ** 0.5) if scale is None else scale
 
-    def kv_index(bi, hi, pi, pt, lens):
-        # clamp the walk at the slot's last allocated page: iterations
-        # past it keep the same block index, so no new DMA is issued
-        frontier = jnp.maximum(lens[bi] - 1, 0) // ps
-        return (pt[bi, jnp.minimum(pi, frontier)], hi // group, 0, 0)
+    def kv_index_for(j):
+        def kv_index(bi, hi, blk, pt, lens):
+            # clamp the walk at the slot's last allocated page:
+            # iterations past it keep the same block index, so no new
+            # DMA is issued (also bounds the pmax % ppb tail reads)
+            frontier = jnp.maximum(lens[bi] - 1, 0) // ps
+            pi = jnp.minimum(blk * ppb + j, frontier)
+            return (pt[bi, pi], hi // group, 0, 0)
+        return kv_index
+
+    kv_specs = []
+    for j in range(ppb):
+        kv_specs += [pl.BlockSpec((1, 1, ps, d), kv_index_for(j)),
+                     pl.BlockSpec((1, 1, ps, d), kv_index_for(j))]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(b, h, pmax),
+        grid=(b, h, nblk),
         in_specs=[
             pl.BlockSpec((1, 1, 1, d),
-                         lambda bi, hi, pi, pt, lens: (bi, hi, 0, 0)),
-            pl.BlockSpec((1, 1, ps, d), kv_index),
-            pl.BlockSpec((1, 1, ps, d), kv_index),
+                         lambda bi, hi, blk, pt, lens: (bi, hi, 0, 0)),
+            *kv_specs,
         ],
         out_specs=pl.BlockSpec(
-            (1, 1, 1, d), lambda bi, hi, pi, pt, lens: (bi, hi, 0, 0)),
+            (1, 1, 1, d), lambda bi, hi, blk, pt, lens: (bi, hi, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((1, d), F32),
             pltpu.VMEM((1, 1), F32),
             pltpu.VMEM((1, 1), F32),
         ],
     )
+    kv_args = []
+    for _ in range(ppb):
+        kv_args += [k_pages, v_pages]
     return pl.pallas_call(
-        functools.partial(_decode_kernel, scale=scale, pmax=pmax),
+        functools.partial(_decode_kernel, scale=scale, nblk=nblk, ppb=ppb),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
         compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pages, v_pages)
+      q, *kv_args)

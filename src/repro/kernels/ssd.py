@@ -25,7 +25,10 @@ from jax.experimental.pallas import tpu as pltpu
 _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
     or getattr(pltpu, "TPUCompilerParams")
 
+from repro.kernels.defaults import DEFAULT_TILES
+
 F32 = jnp.float32
+_CHUNK = DEFAULT_TILES["ssd"]["chunk"]
 
 
 def _ssd_kernel(q_ref, k_ref, v_ref, ld_ref, o_ref, s_ref):
@@ -59,7 +62,7 @@ def _ssd_kernel(q_ref, k_ref, v_ref, ld_ref, o_ref, s_ref):
                   + jnp.dot(kw.T, v, preferred_element_type=F32))
 
 
-def ssd_fwd_pallas(q, k, v, log_decay, chunk: int = 128,
+def ssd_fwd_pallas(q, k, v, log_decay, chunk: int = _CHUNK,
                    interpret: bool = False):
     """q, k: (B,G,N,Dk) shared per group (G | H, Mamba-2 style); v:
     (B,H,N,Dv); log_decay: (B,H,N).  Returns o: (B,H,N,Dv).
@@ -186,7 +189,7 @@ def _ssd_bwd_kv_kernel(q_ref, k_ref, v_ref, om_ref, ld_ref, dk_ref, dv_ref,
                   + jnp.dot(qw.T, om, preferred_element_type=F32))
 
 
-def ssd_bwd_pallas(q, k, v, log_decay, o, omega, chunk: int = 128,
+def ssd_bwd_pallas(q, k, v, log_decay, o, omega, chunk: int = _CHUNK,
                    interpret: bool = False):
     """Analytic SSD backward on TPU.  q, k: (B,G,N,Dk); v/o/omega:
     (B,H,N,Dv); log_decay: (B,H,N).  Returns (dq, dk, dv, dld) with

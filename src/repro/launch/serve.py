@@ -68,6 +68,13 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--json-out", default=None,
                     help="also write the result record to this path")
+    ap.add_argument("--autotune", action="store_true",
+                    help="resolve kernel tile sizes from the tuning "
+                         "cache (docs/autotuning.md) instead of the "
+                         "static defaults")
+    ap.add_argument("--tune-cache", default=None,
+                    help="tuning cache path (implies --autotune; "
+                         "default artifacts/tune_cache.json)")
     args = ap.parse_args()
 
     if args.num_pages is not None and args.page_size is None:
@@ -76,6 +83,14 @@ def main():
     cfg = get_config(args.arch, smoke=True)
     if args.backend:
         cfg = dataclasses.replace(cfg, attention_backend=args.backend)
+    tune_cache = None
+    if args.autotune or args.tune_cache:
+        from repro import tune as _tune
+        from repro.configs.base import TuneCfg
+        cfg = dataclasses.replace(cfg, tune=TuneCfg(
+            enabled=True,
+            cache_path=args.tune_cache or TuneCfg.cache_path))
+        tune_cache = _tune.activate_from_cfg(cfg)
     params = mdl.init_params(cfg, jax.random.PRNGKey(0))
     page_kwargs = {}
     if args.budget_mb is not None and args.page_size is not None:
@@ -123,6 +138,9 @@ def main():
         "generated_tokens": total_tokens,
         "wall_s": round(dt, 3),
         "tokens_per_s": round(total_tokens / dt, 1),
+        "autotune": {"enabled": tune_cache is not None,
+                     "cache_path": cfg.tune.cache_path if cfg.tune else None,
+                     "cache_entries": len(tune_cache) if tune_cache else 0},
     }
     if engine.pool is not None:
         record["paging"] = dict(engine.page_stats(),

@@ -37,11 +37,26 @@ def main():
                     help="full (non-smoke) config — needs real accelerators")
     ap.add_argument("--checkpoint-dir", default="checkpoints")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--autotune", action="store_true",
+                    help="resolve kernel tile sizes from the tuning "
+                         "cache (docs/autotuning.md) instead of the "
+                         "static defaults")
+    ap.add_argument("--tune-cache", default=None,
+                    help="tuning cache path (implies --autotune; "
+                         "default artifacts/tune_cache.json)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=not args.full)
     if args.backend:
         cfg = dataclasses.replace(cfg, attention_backend=args.backend)
+    tune_cache = None
+    if args.autotune or args.tune_cache:
+        from repro import tune as _tune
+        from repro.configs.base import TuneCfg
+        cfg = dataclasses.replace(cfg, tune=TuneCfg(
+            enabled=True,
+            cache_path=args.tune_cache or TuneCfg.cache_path))
+        tune_cache = _tune.activate_from_cfg(cfg)
     get_backend(cfg)  # fail fast on a bad --backend, naming the valid ones
     tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                      warmup_steps=max(args.steps // 10, 1),
@@ -57,7 +72,11 @@ def main():
     print(json.dumps({"first_loss": history[0]["loss"],
                       "last_loss": history[-1]["loss"],
                       "steps": len(history),
-                      "stragglers": trainer.monitor.flagged}))
+                      "stragglers": trainer.monitor.flagged,
+                      "autotune": {
+                          "enabled": tune_cache is not None,
+                          "cache_entries": len(tune_cache)
+                          if tune_cache else 0}}))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,75 @@
+"""repro.tune — kernel autotuning + roofline observability subsystem.
+
+The paper's headline result is kernel-level speed, yet every Pallas
+block size in this repo was a hand-picked constant.  This package is
+the machinery to pursue (and measure progress toward) that claim:
+
+  timer.py   compile-excluded, device-synchronized median-of-k timing —
+             the ONE measurement methodology shared by every benchmark
+             (`benchmarks/run.py`) and by the sweeps here
+  space.py   per-kernel-family tile search spaces (chunk, block_q/k,
+             pages_per_block) with legality filtering against shape,
+             dtype, and a VMEM budget
+  cache.py   persistent JSON tuning cache keyed by (family, impl, op,
+             shape-bucket, dtype, device_kind), schema-validated
+  sweep.py   the sweep driver: measures every legal candidate through
+             the REAL dispatch path (`kernels/ops.py`), caches each
+             winner, and emits `artifacts/BENCH_autotune.json` with a
+             roofline cell per candidate
+
+Dispatch integration lives in `kernels/ops.py`: each KernelImpl wrapper
+consults the installed cache (`ops.set_tuning_cache`) at trace time and
+falls back to `kernels/defaults.py` — with no cache installed, every
+kernel launches exactly as before.  Opt in per process via `activate`
+/ `activate_from_cfg` (cfg.tune, `--autotune` on the launchers), or run
+
+    PYTHONPATH=src python -m repro.tune sweep --family linear \
+        --impl pallas_interpret
+
+to populate the cache.  See docs/autotuning.md.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.tune.cache import TuningCache, shape_bucket, validate
+from repro.tune.space import candidates, search_space
+from repro.tune.timer import Measurement, measure
+
+__all__ = [
+    "Measurement", "measure", "TuningCache", "shape_bucket", "validate",
+    "candidates", "search_space", "activate", "activate_from_cfg",
+    "deactivate",
+]
+
+
+def activate(cache_or_path) -> TuningCache:
+    """Install a tuning cache into kernel dispatch for this process.
+
+    Accepts a TuningCache or a path to load one from (a missing file
+    yields an empty cache — dispatch then behaves exactly as untuned).
+    Returns the installed cache.
+    """
+    from repro.kernels import ops as _ops
+    cache = (cache_or_path if isinstance(cache_or_path, TuningCache)
+             else TuningCache.load(cache_or_path))
+    _ops.set_tuning_cache(cache)
+    return cache
+
+
+def activate_from_cfg(cfg) -> Optional[TuningCache]:
+    """Activate autotuned dispatch when cfg.tune asks for it.
+
+    Launchers call this once after building their ModelConfig; a None
+    or disabled cfg.tune is a no-op returning None.
+    """
+    tune_cfg = getattr(cfg, "tune", None)
+    if tune_cfg is None or not tune_cfg.enabled:
+        return None
+    return activate(tune_cfg.cache_path)
+
+
+def deactivate() -> None:
+    """Remove any installed cache — dispatch falls back to defaults."""
+    from repro.kernels import ops as _ops
+    _ops.set_tuning_cache(None)

@@ -1,0 +1,108 @@
+"""CLI for the autotuning subsystem.
+
+    PYTHONPATH=src python -m repro.tune sweep --family linear \
+        --impl pallas_interpret [--op fwd|fwdbwd] [--seq 256,1024]
+    PYTHONPATH=src python -m repro.tune show [--cache PATH]
+
+`sweep` measures every legal tile candidate for the requested
+(family, impl) at each shape, writes each winner into the persistent
+tuning cache (--cache, default artifacts/tune_cache.json), and emits
+the full candidate x roofline record to --json-out
+(default artifacts/BENCH_autotune.json).  `show` prints the cache.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+from repro.tune.cache import DEFAULT_CACHE_PATH, TuningCache
+from repro.tune.sweep import BENCH_PATH, sweep_shape
+
+FAMILIES = ("linear", "softmax", "gla", "ssd", "paged")
+
+
+def _int_list(text: str) -> list[int]:
+    return [int(x) for x in text.split(",") if x]
+
+
+def cmd_sweep(args) -> int:
+    cache = TuningCache.load(args.cache)
+    records = []
+    for family in args.family:
+        for n in args.seq:
+            shape = {"b": args.b, "h": args.h,
+                     "hkv": args.hkv or args.h, "n": n, "d": args.d}
+            if family == "paged":
+                shape["page_size"] = args.page_size
+            op = "fwd" if family == "paged" else args.op
+            records.append(sweep_shape(
+                family, args.impl, shape, op=op, reps=args.reps,
+                cache=cache))
+    cache.save()
+    print(f"tune,cache_path,{cache.path}")
+    print(f"tune,cache_entries,{len(cache)}")
+    doc = {"device": jax.default_backend(), "sweeps": records}
+    out = args.json_out
+    parent = os.path.dirname(out)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"tune,json_artifact,{out}")
+    return 0
+
+
+def cmd_show(args) -> int:
+    cache = TuningCache.load(args.cache)
+    print(f"# {cache.path}: {len(cache)} entries")
+    for key in sorted(cache.entries):
+        entry = cache.entries[key]
+        extra = (f"  ({entry['median_ms']:.3f}ms median)"
+                 if "median_ms" in entry else "")
+        print(f"{key}  ->  {entry['tiles']}{extra}")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog="python -m repro.tune",
+                                description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    sw = sub.add_parser("sweep", help="sweep tile candidates, cache winners")
+    sw.add_argument("--family", action="append", choices=FAMILIES,
+                    required=True, help="kernel family (repeatable)")
+    sw.add_argument("--impl", default="xla",
+                    help="KernelImpl name (xla, pallas, pallas_interpret)")
+    sw.add_argument("--op", default="fwd", choices=("fwd", "fwdbwd"),
+                    help="time forward only, or forward+backward "
+                         "(paged is always fwd)")
+    sw.add_argument("--b", type=int, default=1)
+    sw.add_argument("--h", type=int, default=8)
+    sw.add_argument("--hkv", type=int, default=0,
+                    help="kv heads (default: --h, i.e. MHA)")
+    sw.add_argument("--d", type=int, default=64)
+    sw.add_argument("--seq", type=_int_list, default=[1024],
+                    help="comma-separated sequence lengths")
+    sw.add_argument("--page-size", type=int, default=16)
+    sw.add_argument("--reps", type=int, default=5)
+    sw.add_argument("--cache", default=DEFAULT_CACHE_PATH)
+    sw.add_argument("--json-out", default=BENCH_PATH)
+    sw.set_defaults(fn=cmd_sweep)
+
+    sh = sub.add_parser("show", help="print the tuning cache")
+    sh.add_argument("--cache", default=DEFAULT_CACHE_PATH)
+    sh.set_defaults(fn=cmd_show)
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

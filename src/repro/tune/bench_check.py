@@ -1,0 +1,78 @@
+"""Assert every benchmark cell carries a roofline block — CI gate.
+
+    PYTHONPATH=src python -m repro.tune.bench_check artifacts/BENCH_*.json
+
+A cell passes when it has a "roofline" object with a numeric
+`t_roofline_s` (the denominator must exist even for skipped cells) and
+an `achieved_frac` key — whose VALUE may be null for unmeasured cells
+(pallas rows skipped on CPU), but whose absence means the bench entry
+forgot the observability contract.  BENCH_autotune.json nests cells
+under sweeps[].candidates[]; BENCH_{flash,gla,paged}.json keep them in
+a top-level "cells" list.
+"""
+from __future__ import annotations
+
+import json
+import numbers
+import sys
+
+
+def check_cell(cell: dict, where: str) -> list[str]:
+    errors = []
+    roof = cell.get("roofline")
+    if not isinstance(roof, dict):
+        return [f"{where}: missing roofline object"]
+    t = roof.get("t_roofline_s")
+    if not isinstance(t, numbers.Real) or t <= 0:
+        errors.append(f"{where}: roofline.t_roofline_s must be a "
+                      f"positive number, got {t!r}")
+    if "achieved_frac" not in roof:
+        errors.append(f"{where}: roofline.achieved_frac key missing "
+                      f"(null is fine, absence is not)")
+    return errors
+
+
+def check_doc(doc: dict, name: str) -> list[str]:
+    errors = []
+    cells = doc.get("cells")
+    if isinstance(cells, list):
+        if not cells:
+            errors.append(f"{name}: empty cells list")
+        for i, cell in enumerate(cells):
+            errors += check_cell(cell, f"{name} cells[{i}]")
+    sweeps = doc.get("sweeps")
+    if isinstance(sweeps, list):
+        if not sweeps:
+            errors.append(f"{name}: empty sweeps list")
+        for i, sweep in enumerate(sweeps):
+            cands = sweep.get("candidates", [])
+            if not cands:
+                errors.append(f"{name}: sweeps[{i}] has no candidates")
+            for j, cand in enumerate(cands):
+                errors += check_cell(
+                    cand, f"{name} sweeps[{i}].candidates[{j}]")
+    if cells is None and sweeps is None:
+        errors.append(f"{name}: neither 'cells' nor 'sweeps' present")
+    return errors
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv is not None else sys.argv[1:])
+    if not paths:
+        print("usage: python -m repro.tune.bench_check BENCH.json ...",
+              file=sys.stderr)
+        return 2
+    errors = []
+    for path in paths:
+        with open(path) as f:
+            doc = json.load(f)
+        errors += check_doc(doc, path)
+        print(f"bench_check,{path},"
+              f"{'FAIL' if any(e.startswith(path) for e in errors) else 'ok'}")
+    for e in errors:
+        print(f"bench_check,error,{e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

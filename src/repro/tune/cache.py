@@ -1,0 +1,178 @@
+"""Persistent JSON tuning cache for kernel tile sizes.
+
+Entries are keyed by (family, impl, op, shape-bucket, dtype,
+device_kind):
+
+  * family/impl — the KernelImpl registry coordinates (kernels/ops.py);
+  * op          — "fwd" or "bwd" (forward and backward kernels tile
+                  independently: the flash backward's dk/dv grid has a
+                  different arithmetic intensity than its forward);
+  * shape-bucket — batch and sequence length rounded UP to powers of
+                  two, head counts and head_dim kept exact.  b and n
+                  vary continuously in serving (ragged batches, growing
+                  contexts) while h/hkv/d are architectural constants;
+                  bucketing keeps one sweep's winner applicable to the
+                  whole bucket and makes lookups deterministic;
+  * dtype       — tile legality and MXU efficiency differ by itemsize;
+  * device_kind — jax.default_backend(): a CPU-interpret winner must
+                  never silently apply on a TPU.
+
+The on-disk format is versioned JSON (`SCHEMA_VERSION`); `validate`
+checks a loaded document structurally and is what CI asserts against.
+A missing file loads as an empty cache — with an empty cache installed,
+kernel dispatch is byte-identical to the untuned defaults
+(kernels/defaults.py), which a test pins.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+SCHEMA_VERSION = 1
+DEFAULT_CACHE_PATH = "artifacts/tune_cache.json"
+_OPS = ("fwd", "bwd")
+
+
+def device_kind() -> str:
+    """The dispatch platform the cache entry was measured on."""
+    return jax.default_backend()
+
+
+def _bucket_pow2(x: int) -> int:
+    x = max(int(x), 1)
+    p = 1
+    while p < x:
+        p <<= 1
+    return p
+
+
+def shape_bucket(shape: dict) -> str:
+    """Deterministic bucket string: b/n rounded up to powers of two,
+    everything else exact, keys sorted."""
+    parts = []
+    for key in sorted(shape):
+        val = int(shape[key])
+        if key in ("b", "n"):
+            val = _bucket_pow2(val)
+        parts.append(f"{key}={val}")
+    return ",".join(parts)
+
+
+def _dtype_name(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+def make_key(family: str, impl: str, op: str, shape: dict, dtype,
+             device: Optional[str] = None) -> str:
+    if op not in _OPS:
+        raise ValueError(f"op must be one of {_OPS}, got {op!r}")
+    device = device or device_kind()
+    return "|".join([family, impl, op, shape_bucket(shape),
+                     _dtype_name(dtype), device])
+
+
+@dataclasses.dataclass
+class TuningCache:
+    """In-memory view of one tuning-cache file.
+
+    lookup/put take the same (family, impl, op, shape, dtype) the
+    dispatch layer has at hand; the key derivation (bucketing, device
+    kind) lives here so callers cannot disagree on it.
+    """
+
+    path: str = DEFAULT_CACHE_PATH
+    entries: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: str = DEFAULT_CACHE_PATH) -> "TuningCache":
+        """Load a cache file; a missing file is an empty cache."""
+        if not os.path.exists(path):
+            return cls(path=path)
+        with open(path) as f:
+            doc = json.load(f)
+        errors = validate(doc)
+        if errors:
+            raise ValueError(
+                f"invalid tuning cache {path!r}: " + "; ".join(errors))
+        return cls(path=path, entries=doc["entries"])
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_doc(), f, indent=1, sort_keys=True)
+        return path
+
+    def to_doc(self) -> dict:
+        return {"version": SCHEMA_VERSION, "entries": self.entries}
+
+    def lookup(self, family: str, impl: str, op: str, shape: dict,
+               dtype, device: Optional[str] = None) -> Optional[dict]:
+        """Tile dict for the key, or None (dispatch then uses defaults)."""
+        entry = self.entries.get(
+            make_key(family, impl, op, shape, dtype, device))
+        return dict(entry["tiles"]) if entry else None
+
+    def put(self, family: str, impl: str, op: str, shape: dict, dtype,
+            tiles: dict, device: Optional[str] = None, **meta) -> str:
+        """Record a winner; extra keyword args (median_ms, swept, ...)
+        are stored alongside for observability.  Returns the key."""
+        device = device or device_kind()
+        key = make_key(family, impl, op, shape, dtype, device)
+        self.entries[key] = {
+            "family": family, "impl": impl, "op": op,
+            "shape_bucket": shape_bucket(shape),
+            "dtype": _dtype_name(dtype), "device_kind": device,
+            "tiles": {k: int(v) for k, v in tiles.items()},
+            **meta,
+        }
+        return key
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+
+def validate(doc) -> list[str]:
+    """Structural schema check; returns a list of errors (empty = valid)."""
+    errors = []
+    if not isinstance(doc, dict):
+        return [f"document must be an object, got {type(doc).__name__}"]
+    if doc.get("version") != SCHEMA_VERSION:
+        errors.append(f"version must be {SCHEMA_VERSION}, "
+                      f"got {doc.get('version')!r}")
+    entries = doc.get("entries")
+    if not isinstance(entries, dict):
+        return errors + ["entries must be an object"]
+    for key, entry in entries.items():
+        where = f"entries[{key!r}]"
+        if not isinstance(entry, dict):
+            errors.append(f"{where} must be an object")
+            continue
+        for field in ("family", "impl", "op", "shape_bucket", "dtype",
+                      "device_kind"):
+            if not isinstance(entry.get(field), str):
+                errors.append(f"{where}.{field} must be a string")
+        if entry.get("op") not in _OPS:
+            errors.append(f"{where}.op must be one of {_OPS}")
+        tiles = entry.get("tiles")
+        if not isinstance(tiles, dict) or not tiles:
+            errors.append(f"{where}.tiles must be a non-empty object")
+        elif not all(isinstance(v, int) and v > 0 for v in tiles.values()):
+            errors.append(f"{where}.tiles values must be positive ints")
+        else:
+            expect = "|".join([entry.get("family", ""),
+                               entry.get("impl", ""), entry.get("op", ""),
+                               entry.get("shape_bucket", ""),
+                               entry.get("dtype", ""),
+                               entry.get("device_kind", "")])
+            if expect != key:
+                errors.append(f"{where} key does not match its fields "
+                              f"(expected {expect!r})")
+    return errors

@@ -1,0 +1,130 @@
+"""Per-kernel-family tile search spaces with legality filtering.
+
+A search space maps tile-parameter names to candidate values; the
+parameter names are exactly the keys `kernels/defaults.py` declares for
+the family (and therefore exactly what a tuning-cache entry may carry
+and what kernel dispatch will apply).  Spaces depend on the impl, not
+just the family: the pallas flash kernel tunes (block_q, block_k) while
+the softmax xla scan tunes its chunk size; ref oracles and the paged
+gather oracle tune nothing.
+
+`candidates` expands the space to the cross product, then drops
+candidates that are illegal for the concrete (shape, dtype):
+
+  * a tile larger than the dimension it tiles is a duplicate of the
+    clamped maximum (every kernel applies `min(tile, n)`), so only the
+    largest such candidate is kept;
+  * the per-step VMEM footprint (streamed blocks + f32 scratch) must
+    fit the budget — oversized tiles would fail to lower on real TPUs;
+  * every legal list contains at least one candidate (the clamped
+    family default), so a sweep can never come back empty.
+
+Shape dicts use the keys produced by `kernels/ops.py` dispatch:
+b, h, hkv, n, d (+ page_size for the paged family).
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+
+from repro.kernels.defaults import default_tiles
+
+# one TPU core's VMEM is ~16 MiB; leave headroom for the pipeline's
+# double-buffering of the streamed blocks
+VMEM_BUDGET = 8 * 1024 * 1024
+
+_CHUNKS = [32, 64, 128, 256, 512]
+_BLOCKS = [64, 128, 256, 512]
+_PPBS = [1, 2, 4, 8]
+
+
+def search_space(family: str, impl: str) -> dict[str, list[int]]:
+    """Tile-parameter candidate values for one (family, impl)."""
+    if impl == "ref":
+        return {}  # oracles take no tile parameters
+    pallas = impl.startswith("pallas")
+    if family in ("linear", "gla", "ssd"):
+        return {"chunk": list(_CHUNKS)}
+    if family == "softmax":
+        if pallas:
+            return {"block_q": list(_BLOCKS), "block_k": list(_BLOCKS)}
+        return {"chunk": list(_CHUNKS)}
+    if family == "paged":
+        if pallas:
+            return {"pages_per_block": list(_PPBS)}
+        return {}  # the xla impl is gather-then-softmax, nothing to tile
+    raise KeyError(f"no search space for kernel family {family!r}")
+
+
+def vmem_bytes_estimate(family: str, cand: dict, shape: dict) -> int:
+    """f32 bytes resident per grid step: streamed blocks + scratch.
+
+    A structural estimate (the compiler may fuse or double-buffer), used
+    only to reject clearly-oversized tiles before a sweep wastes time on
+    them or a TPU lowering rejects them.
+    """
+    d = shape["d"]
+    if family in ("linear", "gla", "ssd"):
+        c = cand.get("chunk", 128)
+        # q, k, v, o blocks (c, d); g/ld vectors (c,); state (d, d+1)
+        return 4 * (4 * c * d + 2 * c + d * (d + 1))
+    if family == "softmax":
+        bq = cand.get("block_q", 128)
+        bk = cand.get("block_k", 128)
+        c = cand.get("chunk", 0)
+        if c:  # xla scan: per-chunk probability block
+            return 4 * (c * shape["n"] + 3 * c * d)
+        # q/o/acc blocks (bq, d), k/v blocks (bk, d), m/l vectors
+        return 4 * (3 * bq * d + 2 * bk * d + 2 * bq)
+    if family == "paged":
+        ps = shape.get("page_size", 16)
+        ppb = cand.get("pages_per_block", 1)
+        # ppb K and V page blocks (ps, d) + q/acc rows
+        return 4 * (2 * ppb * ps * d + 2 * d)
+    raise KeyError(f"no VMEM model for kernel family {family!r}")
+
+
+def _tiled_extent(family: str, param: str, shape: dict) -> int:
+    """The extent the parameter tiles — values above it are clamps."""
+    if param == "pages_per_block":
+        ps = max(shape.get("page_size", 16), 1)
+        return max(-(-shape["n"] // ps), 1)
+    return max(shape["n"], 1)
+
+
+def candidates(family: str, impl: str, shape: dict, dtype=jnp.float32,
+               vmem_budget: int = VMEM_BUDGET) -> list[dict]:
+    """Legal tile assignments for one (family, impl, shape, dtype).
+
+    Returns a list of dicts (possibly a single empty dict for untiled
+    impls), deduplicated after clamping each parameter to the extent it
+    tiles, VMEM-filtered, and guaranteed non-empty: the clamped family
+    default is always included.
+    """
+    space = search_space(family, impl)
+    if not space:
+        return [{}]
+    params = sorted(space)
+    seen, out = set(), []
+
+    def consider(cand: dict):
+        clamped = {p: min(v, _tiled_extent(family, p, shape))
+                   for p, v in cand.items()}
+        key = tuple(sorted(clamped.items()))
+        if key in seen:
+            return
+        seen.add(key)
+        if vmem_bytes_estimate(family, clamped, shape) <= vmem_budget:
+            out.append(clamped)
+
+    for values in itertools.product(*(space[p] for p in params)):
+        consider(dict(zip(params, values)))
+    if not out:
+        # every swept tile blew the budget: fall back to the clamped
+        # default so the sweep (and dispatch) always has a candidate
+        defaults = {p: v for p, v in default_tiles(family).items()
+                    if p in space}
+        out.append({p: min(v, _tiled_extent(family, p, shape))
+                    for p, v in defaults.items()})
+    return out

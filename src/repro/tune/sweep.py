@@ -1,0 +1,161 @@
+"""Sweep driver: measure every legal tile candidate through the REAL
+dispatch path and cache each winner.
+
+For each candidate the driver installs a single-purpose override cache
+(`_FixedTiles`) via `ops.set_tuning_cache`, builds a FRESH `jax.jit`
+(tile resolution happens at trace time, and jit caches traces — reusing
+a jitted callable would silently reuse the first candidate's tiles),
+measures with `tune.timer.measure`, and restores the previous cache.
+The winner by median wall-clock goes into the persistent `TuningCache`
+under op "fwd" (and "bwd" too for `op="fwdbwd"` sweeps — the joint
+measurement picks one tile pair for the training step).
+
+Every candidate row carries a roofline cell
+(`analysis.roofline.kernel_roofline` over the family's structural
+costs), so `artifacts/BENCH_autotune.json` doubles as the observability
+artifact: achieved-vs-roofline fraction per (family, impl, shape,
+candidate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline import attention_costs, kernel_roofline
+from repro.kernels import ops
+from repro.tune.cache import TuningCache, shape_bucket
+from repro.tune.space import candidates
+from repro.tune.timer import measure
+
+BENCH_PATH = "artifacts/BENCH_autotune.json"
+
+
+class _FixedTiles:
+    """Override cache answering every lookup with one tile dict —
+    routes a sweep candidate through the production dispatch path."""
+
+    def __init__(self, tiles: dict):
+        self.tiles = dict(tiles)
+
+    def lookup(self, *args, **kwargs):
+        return dict(self.tiles) if self.tiles else None
+
+
+def _qkv(shape: dict, dtype, key: int = 0):
+    b, h, hkv = shape["b"], shape["h"], shape["hkv"]
+    n, d = shape["n"], shape["d"]
+    ks = jax.random.split(jax.random.PRNGKey(key), 4)
+    q = (jax.random.normal(ks[0], (b, h, n, d)) * 0.3).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, hkv, n, d)) * 0.3).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, n, d)).astype(dtype)
+    return ks, q, k, v
+
+
+def build_problem(family: str, impl: str, shape: dict, op: str,
+                  dtype=jnp.float32):
+    """(callable, args) measuring one op of one family through ops.*.
+
+    The callable is UNJITTED — the sweep wraps it in a fresh jax.jit
+    per candidate.  op "fwd" times the forward; "fwdbwd" times
+    grad-of-sum (forward + custom-vjp backward together).
+    """
+    ks, q, k, v = _qkv(shape, dtype)
+    # custom_vjp entry points take no keyword args — pass positionally;
+    # the caller-level chunk below is only the fallback and is shadowed
+    # by the sweep's override cache
+    if family == "linear":
+        def fwd(q, k, v):
+            return ops.la_causal(q, k, v, 1.0, 1.0, ops.DEFAULT_CHUNK,
+                                 impl)
+        args = (q, k, v)
+    elif family == "softmax":
+        def fwd(q, k, v):
+            return ops.softmax_attention(q, k, v, backend=impl)
+        args = (q, k, v)
+    elif family == "gla":
+        ld = -jax.nn.softplus(
+            jax.random.normal(ks[3], (shape["b"], shape["hkv"],
+                                      shape["n"]))).astype(dtype)
+
+        def fwd(q, k, v, ld):
+            return ops.gla_causal(q, k, v, ld, 1.0, 1.0, 128, impl)
+        args = (q, k, v, ld)
+    elif family == "ssd":
+        # q, k shared per group (hkv groups); v and decay carry h heads
+        qg = (jax.random.normal(ks[0], (shape["b"], shape["hkv"],
+                                        shape["n"], shape["d"]))
+              * 0.3).astype(dtype)
+        vh = jax.random.normal(ks[2], (shape["b"], shape["h"],
+                                       shape["n"], shape["d"]))
+        ld = -jax.nn.softplus(
+            jax.random.normal(ks[3], (shape["b"], shape["h"],
+                                      shape["n"]))).astype(dtype)
+
+        def fwd(q, k, v, ld):
+            return ops.ssd_causal(q, k, v, ld, 128, impl)
+        args = (qg, k, vh.astype(dtype), ld)
+    elif family == "paged":
+        if op != "fwd":
+            raise ValueError("paged decode is inference-only (op=fwd)")
+        ps = shape.get("page_size", 16)
+        b, h, hkv, d = shape["b"], shape["h"], shape["hkv"], shape["d"]
+        pmax = max(-(-shape["n"] // ps), 1)
+        num_pages = b * pmax + 1
+        qd = (jax.random.normal(ks[0], (b, h, 1, d)) * 0.3).astype(dtype)
+        kp = (jax.random.normal(ks[1], (num_pages, hkv, ps, d))
+              * 0.3).astype(dtype)
+        vp = jax.random.normal(ks[2], (num_pages, hkv, ps, d)).astype(dtype)
+        pt = jnp.arange(b * pmax, dtype=jnp.int32).reshape(b, pmax)
+        lens = jnp.full((b,), pmax * ps, jnp.int32)
+
+        def fwd(q):
+            return ops.paged_attention(q, kp, vp, pt, lens, backend=impl)
+        args = (qd,)
+    else:
+        raise KeyError(f"no sweep problem for kernel family {family!r}")
+
+    if op == "fwd":
+        return fwd, args
+    if op == "fwdbwd":
+        argnums = tuple(range(len(args)))
+        return jax.grad(lambda *a: jnp.sum(fwd(*a)), argnums=argnums), args
+    raise ValueError(f"op must be fwd|fwdbwd, got {op!r}")
+
+
+def sweep_shape(family: str, impl: str, shape: dict, *, op: str = "fwd",
+                reps: int = 5, warmup: int = 1, dtype=jnp.float32,
+                cache: TuningCache | None = None, log=print) -> dict:
+    """Sweep all legal candidates at one shape; record the winner.
+
+    Returns the BENCH_autotune record for this (family, impl, shape):
+    one row per candidate with tiles, timing, and a roofline cell.
+    """
+    cands = candidates(family, impl, shape, dtype)
+    costs = attention_costs(family, shape, op=op)
+    rows = []
+    for cand in cands:
+        prev = ops.set_tuning_cache(_FixedTiles(cand) if cand else None)
+        try:
+            fn, args = build_problem(family, impl, shape, op, dtype)
+            m = measure(jax.jit(fn), *args, reps=reps, warmup=warmup)
+        finally:
+            ops.set_tuning_cache(prev)
+        roof = kernel_roofline(costs["flops"], costs["bytes"],
+                               time_s=m.median_s)
+        rows.append({"tiles": cand, "median_ms": round(m.median_ms, 4),
+                     "min_ms": round(m.min_s * 1e3, 4),
+                     "roofline": roof})
+        log(f"tune,{family}.{impl}.{op},{shape_bucket(shape)},"
+            f"{cand},{m.median_ms:.3f}ms")
+    best = min(rows, key=lambda r: r["median_ms"])
+    record = {"family": family, "impl": impl, "op": op,
+              "shape": dict(shape), "shape_bucket": shape_bucket(shape),
+              "dtype": jnp.dtype(dtype).name, "candidates": rows,
+              "best": best}
+    if cache is not None and best["tiles"]:
+        cache_ops = ("fwd", "bwd") if op == "fwdbwd" else (op,)
+        for cop in cache_ops:
+            cache.put(family, impl, cop, shape, dtype, best["tiles"],
+                      median_ms=best["median_ms"], swept=len(rows),
+                      swept_op=op)
+    return record

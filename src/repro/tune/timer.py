@@ -1,0 +1,63 @@
+"""Compile-excluded, device-synchronized median-of-k timing.
+
+The ONE measurement methodology for this repo: `benchmarks/run.py`'s
+entries and `repro.tune.sweep` both time through `measure`, so a number
+in BENCH_flash.json is comparable to a number in BENCH_autotune.json.
+
+Methodology (and why):
+
+  * warmup calls run first and are never timed — jit compilation and
+    autotuner-cache population happen there, not in a measured rep;
+  * EVERY rep is bracketed by `jax.block_until_ready` on the rep's own
+    outputs — async dispatch otherwise attributes a rep's device time
+    to whoever synchronizes next;
+  * the statistic is the MEDIAN of k reps, not the mean: wall-clock on
+    a shared host is contaminated by one-sided outliers (GC, scheduler
+    preemption), and the median is robust to them where the mean is not.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """Wall-clock stats for one callable at one shape, seconds."""
+
+    median_s: float
+    mean_s: float
+    min_s: float
+    max_s: float
+    reps: int
+    warmup: int
+
+    @property
+    def median_ms(self) -> float:
+        return self.median_s * 1e3
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def measure(fn: Callable[..., Any], *args, reps: int = 5,
+            warmup: int = 1, **kwargs) -> Measurement:
+    """Time `fn(*args, **kwargs)`: `warmup` untimed calls (compile),
+    then `reps` calls each synchronized via block_until_ready.
+    """
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1, got {reps}")
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args, **kwargs))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        ts.append(time.perf_counter() - t0)
+    return Measurement(median_s=statistics.median(ts),
+                       mean_s=sum(ts) / len(ts), min_s=min(ts),
+                       max_s=max(ts), reps=reps, warmup=max(warmup, 0))
