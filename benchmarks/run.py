@@ -47,7 +47,7 @@ denominator still present for skipped cells) per measurement.
 from __future__ import annotations
 
 import sys
-import time
+from repro.tune.timer import now
 
 import jax
 import jax.numpy as jnp
@@ -229,13 +229,13 @@ def bench_fig5(steps: int = 30):
         opt = adamw.init(params)
         step = jax.jit(build_train_step(cfg, tc))
         data = SyntheticLM(cfg.vocab_size, 64, 8, seed=0)
-        t0 = time.perf_counter()
+        t0 = now()
         losses = []
         for i in range(steps):
             params, opt, m = step(params, opt,
                                   {"tokens": data.batch_at(i)}, i)
             losses.append(float(m["loss"]))
-        wall = time.perf_counter() - t0
+        wall = now() - t0
         results[backend] = (losses, wall)
         print(f"fig5,{backend}_first_loss,{losses[0]:.4f}")
         print(f"fig5,{backend}_final_loss,{losses[-1]:.4f}")
@@ -268,9 +268,9 @@ def bench_serve(requests: int = 6, max_new: int = 8):
         for rid in range(requests):
             engine.submit(Request(rid=rid, prompt=list(range(3, 15)),
                                   max_new_tokens=max_new))
-        t0 = time.perf_counter()
+        t0 = now()
         done = engine.run()
-        dt = time.perf_counter() - t0
+        dt = now() - t0
         toks = sum(len(v) for v in done.values())
         print(f"serve,{backend}_tokens_per_s,{toks/dt:.1f}")
         print(f"serve,{backend}_per_slot_bytes,"

@@ -6,7 +6,7 @@ equivalent would need a 500k-entry KV cache and O(N) work per token.
 
     PYTHONPATH=src python examples/long_context.py
 """
-import time
+from repro.tune.timer import now
 
 import jax
 import jax.numpy as jnp
@@ -28,12 +28,12 @@ decode = jax.jit(lambda p, c, t: mdl.decode_step(p, cfg, c, t))
 tokens = jnp.asarray([5], jnp.int32)
 logits, cache = decode(params, cache, tokens)  # compile
 
-t0 = time.perf_counter()
+t0 = now()
 steps = 50
 for _ in range(steps):
     logits, cache = decode(params, cache, tokens)
 jax.block_until_ready(logits)
-dt = (time.perf_counter() - t0) / steps
+dt = (now() - t0) / steps
 
 la_bytes = cache_bytes(cfg, 1, 1 << 20)
 kv_bytes = kv_cache_bytes_analytic(

@@ -1,0 +1,18 @@
+"""repro.check — static kernel-contract analyzer (docs/static_analysis.md).
+
+Audits every registered kernel without executing one:
+
+  jaxpr_audit     J-rules: O(ND) residuals, f32 accumulation, dtype
+                  closure (abstract tracing over the ops.py registry)
+  bounds          B-rules: BlockSpec/grid proofs for every Pallas
+                  launch (index maps, scalar-prefetch gathers, tails)
+  vmem            V-rules: default + cached tiles vs the VMEM budget
+                  for every configs/registry.py workload
+  registry_audit  R-rules: impl-set completeness, mixer capability
+                  flags, softmax custom-VJP wiring
+  lint            L-rules: AST lint for repo invariants (timer
+                  discipline, no stray tile literals, no interpret=True)
+
+CLI: `python -m repro.check [--strict] [--json artifacts/CHECK.json]`.
+"""
+from repro.check.findings import RULES, Finding  # noqa: F401

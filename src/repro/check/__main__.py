@@ -1,0 +1,97 @@
+"""CLI: run every analyzer pass, print findings, emit CHECK.json.
+
+    python -m repro.check [--strict] [--json artifacts/CHECK.json]
+                          [--only jaxpr,bounds,vmem,registry,lint]
+
+Exit status: 0 when clean (always, without --strict); --strict exits 1
+on any finding — the CI static-analysis job runs that mode.  CHECK.json
+carries the full findings list plus the coverage records proving every
+(family, impl) was audited.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+from repro.check import bounds, jaxpr_audit, lint, registry_audit, vmem
+from repro.check.findings import RULES
+
+PASSES = {
+    "registry": lambda log: registry_audit.run(log=log),
+    "lint": lambda log: lint.run(log=log),
+    "vmem": lambda log: vmem.run(log=log),
+    "jaxpr": lambda log: jaxpr_audit.run(log=log),
+    "bounds": lambda log: bounds.run(log=log),
+}
+
+
+def run_all(only=None, log=print) -> dict:
+    findings, coverage = [], []
+    for name, runner in PASSES.items():
+        if only and name not in only:
+            continue
+        f, c = runner(log)
+        findings += f
+        coverage += [{**rec, "pass": rec.get("pass", name)} for rec in c]
+    counts: dict[str, int] = {}
+    for f in findings:
+        counts[f.rule] = counts.get(f.rule, 0) + 1
+    return {
+        "version": 1,
+        "device": jax.default_backend(),
+        "passes": sorted(only) if only else sorted(PASSES),
+        "rules": {rid: RULES[rid] for rid in sorted(RULES)},
+        "coverage": coverage,
+        "findings": [f.to_json() for f in findings],
+        "counts": dict(sorted(counts.items())),
+        "clean": not findings,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="static kernel-contract analyzer")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any finding (the CI gate)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the CHECK.json report here")
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of passes "
+                         f"({','.join(PASSES)})")
+    args = ap.parse_args(argv)
+
+    only = None
+    if args.only:
+        only = {p.strip() for p in args.only.split(",") if p.strip()}
+        unknown = only - set(PASSES)
+        if unknown:
+            ap.error(f"unknown pass(es) {sorted(unknown)}; "
+                     f"known: {sorted(PASSES)}")
+
+    report = run_all(only=only)
+    for f in report["findings"]:
+        print(f"{f['rule']} {f['where']}: {f['detail']}")
+    audited = [c for c in report["coverage"] if "impl" in c]
+    print(f"check,done,{len(report['findings'])} findings,"
+          f"{len(audited)} (family,impl) cells audited")
+
+    if args.json:
+        parent = os.path.dirname(args.json)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        print(f"check,report,{args.json}")
+
+    if args.strict and report["findings"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+"""Finding records + the rule catalog for `repro.check`.
+
+Every analyzer pass emits `Finding`s tagged with a stable rule ID; the
+CLI aggregates them into CHECK.json and CI fails on any finding under
+`--strict`.  Rule IDs are append-only: retiring a rule leaves its ID
+reserved (docs/static_analysis.md is the human-readable catalog).
+
+Prefixes group the passes:
+
+  REPRO-J*  jaxpr audits          (check/jaxpr_audit.py)
+  REPRO-B*  BlockSpec/grid bounds (check/bounds.py)
+  REPRO-V*  VMEM tile legality    (check/vmem.py)
+  REPRO-R*  registry coverage     (check/registry_audit.py)
+  REPRO-L*  AST lint              (check/lint.py)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+RULES: dict[str, str] = {
+    # -- jaxpr audits ------------------------------------------------------
+    "REPRO-J001": "custom-VJP residual bytes grow superlinearly in N "
+                  "(the paper's memory story requires O(ND) residuals)",
+    "REPRO-J002": "low-precision dot_general without "
+                  "preferred_element_type=float32 (unguarded bf16/f16 "
+                  "accumulation)",
+    "REPRO-J003": "kernel output dtype does not close over the input "
+                  "dtype (f32 leak or silent downcast)",
+    # -- BlockSpec / grid bounds ------------------------------------------
+    "REPRO-B001": "BlockSpec index_map result out of the array's extent "
+                  "at some grid point (incl. scalar-prefetch gathers)",
+    "REPRO-B002": "grid does not cover the full output extent "
+                  "(dropped tail blocks)",
+    "REPRO-B003": "block shape does not divide the (padded) array "
+                  "extent (partial blocks)",
+    "REPRO-B004": "per-grid-step VMEM footprint (streamed blocks + "
+                  "scratch) exceeds the budget",
+    # -- VMEM tile legality -----------------------------------------------
+    "REPRO-V001": "default tile (kernels/defaults.py) fails the VMEM "
+                  "estimate for a registry shape",
+    "REPRO-V002": "tuning-cache entry is invalid or its tiles fail the "
+                  "VMEM estimate for its shape bucket",
+    # -- registry coverage ------------------------------------------------
+    "REPRO-R001": "kernel family missing a required impl "
+                  "(xla/pallas/pallas_interpret/ref)",
+    "REPRO-R002": "mixer capability flag inconsistent with the methods "
+                  "the backend actually overrides",
+    "REPRO-R003": "softmax-family impl registers a bwd without the "
+                  "fwd_res the custom VJP needs",
+    # -- AST lint ----------------------------------------------------------
+    "REPRO-L001": "time.time/time.perf_counter outside tune/timer.py "
+                  "(use repro.tune.timer.measure/now/wallclock)",
+    "REPRO-L002": "hardcoded tile constant in kernels/*.py outside "
+                  "defaults.py (chunk/block_q/block_k/pages_per_block)",
+    "REPRO-L003": "interpret=True default or literal in non-test code "
+                  "(interpret mode is a test/CI validation device)",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer hit: a stable rule ID, where it fired, and why."""
+
+    rule: str
+    where: str   # "family.impl.op @ shape" or "path/to/file.py:LINE"
+    detail: str
+
+    def __post_init__(self):
+        if self.rule not in RULES:
+            raise KeyError(f"unknown rule id {self.rule!r}; known: "
+                           f"{sorted(RULES)}")
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "where": self.where,
+                "detail": self.detail, "summary": RULES[self.rule]}
+
+    def __str__(self) -> str:
+        return f"{self.rule} {self.where}: {self.detail}"

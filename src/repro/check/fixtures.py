@@ -1,0 +1,97 @@
+"""Seeded-defect fixtures: one deliberately broken kernel per analyzer.
+
+These are the analyzer's own regression tests (tests/test_check.py):
+each fixture violates exactly one contract and the corresponding audit
+must report exactly that rule ID.  They are NOT registered in
+`kernels/ops.py` — they exist to prove the analyzer would catch the
+defect if a real kernel regressed into it.
+
+  oob_blocked_sum        index_map walks one block past the extent
+                         -> REPRO-B001 (check via bounds.record_launches)
+  quadratic_residual_fwd custom-VJP fwd rule saving the (N, N)
+                         attention matrix -> REPRO-J001
+  unguarded_bf16_matmul  bf16 contraction without
+                         preferred_element_type -> REPRO-J002
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.check import bounds, jaxpr_audit
+from repro.check.findings import Finding
+
+
+# ---------------------------------------------------------------------------
+# REPRO-B001: off-by-one index map
+# ---------------------------------------------------------------------------
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def oob_blocked_sum(x, block: int = 16):
+    """Blocked copy whose INPUT index map reads block i+1 — the last
+    grid step indexes one block past the array."""
+    n = x.shape[0]
+    t = n // block
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(t,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i + 1,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+    )(x)
+
+
+def audit_oob_fixture() -> list[Finding]:
+    with bounds.record_launches() as launches:
+        oob_blocked_sum(jnp.zeros((64,), jnp.float32))
+    findings = []
+    for launch in launches:
+        findings += bounds.check_launch(launch)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# REPRO-J001: O(N^2) residual
+# ---------------------------------------------------------------------------
+
+def quadratic_residual_fwd(q, k, v):
+    """A fwd rule that saves the full attention matrix as a residual —
+    the exact memory blow-up the paper's chunked recurrence avoids."""
+    att = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    att = jnp.where(lax.broadcasted_iota(jnp.int32, att.shape, 0)
+                    >= lax.broadcasted_iota(jnp.int32, att.shape, 1),
+                    att, 0.0)
+    o = jnp.dot(att, v, preferred_element_type=jnp.float32)
+    return o, (q, k, v, att)
+
+
+def audit_quadratic_residual_fixture() -> list[Finding]:
+    def make_args(n):
+        d = 16
+        sds = jax.ShapeDtypeStruct
+        return (sds((n, d), jnp.float32),) * 3
+    return jaxpr_audit.residual_growth_findings(
+        quadratic_residual_fwd, make_args,
+        "fixtures.quadratic_residual_fwd")
+
+
+# ---------------------------------------------------------------------------
+# REPRO-J002: unguarded bf16 accumulation
+# ---------------------------------------------------------------------------
+
+def unguarded_bf16_matmul(a, b):
+    """bf16 x bf16 contraction accumulating in bf16 (no
+    preferred_element_type) — loses ~8 bits of mantissa per add."""
+    return lax.dot(a, b)
+
+
+def audit_bf16_fixture() -> list[Finding]:
+    sds = jax.ShapeDtypeStruct
+    args = (sds((32, 32), jnp.bfloat16), sds((32, 32), jnp.bfloat16))
+    return jaxpr_audit.precision_findings(
+        unguarded_bf16_matmul, args, "fixtures.unguarded_bf16_matmul")

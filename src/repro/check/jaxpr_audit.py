@@ -1,0 +1,271 @@
+"""Jaxpr audits: residual growth, f32 accumulation, dtype closure.
+
+Everything here is abstract — `jax.eval_shape` / `jax.make_jaxpr` trace
+the REAL registry entry points (kernels/ops.py) over representative
+shapes without executing a single kernel, so the audits are cheap
+enough to run on every PR and cover the compiled-pallas impls even on a
+CPU container.
+
+Three contracts, one rule each:
+
+  REPRO-J001  custom-VJP residuals are O(ND): the residual pytree the
+              `_<family>_causal_fwd` rule saves is measured at two
+              sequence lengths and its byte growth must track N, not
+              N^2 (the paper's memory story; autodiff's O(N D^2) chunk
+              stacks or an accidental (N, N) residual both trip this).
+  REPRO-J002  every `dot_general` whose operands are bf16/f16 carries
+              `preferred_element_type=float32` — the MXU must
+              accumulate in f32.  Kernels that upcast operands before
+              the dot satisfy the contract trivially.
+  REPRO-J003  the primary output dtype equals the query dtype for every
+              (family, impl, dtype) cell — no f32 leaks into the
+              residual stream, no silent downcasts.
+
+Representative shapes are drawn around the `tune.space` tile extents
+(so clamped and multi-tile paths both trace) plus odd-N / GQA / bf16
+edge cases.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.check.findings import Finding
+from repro.kernels import ops
+from repro.tune.sweep import build_problem
+
+F32 = jnp.float32
+LOW_PRECISION = (jnp.bfloat16, jnp.float16)
+
+# residual-growth measurement points: both multiples of every default
+# tile AND spanning the tune.space chunk extents, so the ratio isolates
+# the N-dependence (N2/N1 == 4; O(ND) residuals give exactly 4)
+_RES_N = (128, 512)
+# slack over perfectly-linear growth: constant-size leaves (states,
+# scalars) pull the ratio DOWN, so anything meaningfully above the
+# linear ratio means a superlinear leaf snuck into the residuals
+_RES_SLACK = 1.5
+
+# audit shapes: (tag, shape-dict overrides).  Base is MHA at a tile
+# boundary; variants clamp tiles (odd N below the default), exercise
+# GQA index maps, and cross a tile boundary with a ragged tail.
+_BASE = {"b": 2, "h": 4, "hkv": 4, "n": 128, "d": 16}
+AUDIT_SHAPES = [
+    ("base", {}),
+    ("gqa", {"hkv": 2}),
+    ("odd_n", {"n": 97}),
+    ("tail_n", {"n": 257, "hkv": 2}),
+]
+AUDIT_DTYPES = (jnp.float32, jnp.bfloat16)
+
+# the custom-VJP forward rules (residual-saving halves) per family.
+# softmax only routes through its rule for impls that registered a bwd;
+# the others fall back to autodiff and have no residual contract.
+_FWD_RULES = {
+    "linear": lambda impl: (lambda q, k, v:
+                            ops._la_causal_fwd(q, k, v, 1.0, 1.0, 64,
+                                               impl)),
+    "gla": lambda impl: (lambda q, k, v, ld:
+                         ops._gla_causal_fwd(q, k, v, ld, 1.0, 1.0, 64,
+                                             impl)),
+    "ssd": lambda impl: (lambda q, k, v, ld:
+                         ops._ssd_causal_fwd(q, k, v, ld, 64, impl)),
+    "softmax": lambda impl: (lambda q, k, v:
+                             ops._softmax_causal_fwd(q, k, v, 64, impl)),
+}
+
+
+def _shape_at(tag_overrides: dict, **extra) -> dict:
+    shape = dict(_BASE)
+    shape.update(tag_overrides)
+    shape.update(extra)
+    return shape
+
+
+def _tree_bytes(tree) -> int:
+    return sum(math.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def _abstract_args(family: str, impl: str, shape: dict, op: str,
+                   dtype) -> tuple:
+    """(callable, example args) for one registry cell — reuses the
+    sweep driver's problem builder so the audit traces exactly what the
+    autotuner measures (the production dispatch path)."""
+    return build_problem(family, impl, shape, op, dtype=dtype)
+
+
+def residual_supports_bwd(family: str, impl_name: str) -> bool:
+    """Does (family, impl) train through a custom-VJP residual path?"""
+    impl = ops.get_kernel(family, impl_name)
+    if family == "softmax":
+        return impl.bwd is not None and impl.fwd_res is not None
+    return family in _FWD_RULES  # linear/gla/ssd: bwd falls back to xla
+
+
+def residual_growth_findings(fwd_rule, make_args, where: str,
+                             ns=_RES_N,
+                             slack: float = _RES_SLACK) -> list[Finding]:
+    """REPRO-J001 core: `fwd_rule(*make_args(n)) -> (out, residuals)`;
+    residual bytes across the two Ns must grow ~linearly."""
+    measured = []
+    for n in ns:
+        args = make_args(n)
+        res = jax.eval_shape(lambda *a: fwd_rule(*a)[1], *args)
+        measured.append((n, _tree_bytes(res)))
+    (n1, b1), (n2, b2) = measured
+    if b1 <= 0:
+        return [Finding("REPRO-J001", where,
+                        "empty residual pytree (nothing for the "
+                        "backward to read)")]
+    ratio, linear = b2 / b1, n2 / n1
+    if ratio > slack * linear:
+        return [Finding(
+            "REPRO-J001", where,
+            f"residual bytes grew {ratio:.1f}x when N grew {linear:.0f}x "
+            f"({b1} B @ N={n1} -> {b2} B @ N={n2}); O(ND) residuals "
+            f"must track N")]
+    return []
+
+
+def audit_residuals(family: str, impl: str,
+                    dtype=jnp.float32) -> list[Finding]:
+    """REPRO-J001: residual bytes must grow ~linearly in N."""
+    if family not in _FWD_RULES or not residual_supports_bwd(family, impl):
+        return []
+    rule = _FWD_RULES[family](impl)
+
+    def make_args(n):
+        _, args = _abstract_args(family, impl, _shape_at({}, n=n),
+                                 "fwd", dtype)
+        return args
+    return residual_growth_findings(rule, make_args,
+                                    f"{family}.{impl}.fwd")
+
+
+def _iter_eqns(jaxpr):
+    """Yield every eqn in a jaxpr and all jaxprs nested in its params
+    (scan/pjit/custom_vjp bodies, pallas_call kernel jaxprs, ...)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn.params):
+            yield from _iter_eqns(sub)
+
+
+def _sub_jaxprs(obj):
+    if isinstance(obj, jax.core.Jaxpr):
+        yield obj
+    elif isinstance(obj, jax.core.ClosedJaxpr):
+        yield obj.jaxpr
+    elif isinstance(obj, dict):
+        for v in obj.values():
+            yield from _sub_jaxprs(v)
+    elif isinstance(obj, (list, tuple)):
+        for v in obj:
+            yield from _sub_jaxprs(v)
+
+
+def _is_low_precision(aval) -> bool:
+    dtype = getattr(aval, "dtype", None)
+    return dtype is not None and any(dtype == jnp.dtype(lp)
+                                     for lp in LOW_PRECISION)
+
+
+def precision_findings(fn, args, where: str) -> list[Finding]:
+    """REPRO-J002 core: trace `fn(*args)` and flag every low-precision
+    dot_general that does not request f32 accumulation (first hit only
+    — one finding per traced callable is enough signal)."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    for eqn in _iter_eqns(jaxpr.jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        if not any(_is_low_precision(v.aval) for v in eqn.invars):
+            continue
+        pref = eqn.params.get("preferred_element_type")
+        if pref is None or jnp.dtype(pref) not in (jnp.dtype(jnp.float32),
+                                                   jnp.dtype(jnp.float64)):
+            operand_dtypes = [str(getattr(v.aval, "dtype", "?"))
+                              for v in eqn.invars]
+            return [Finding(
+                "REPRO-J002", where,
+                f"dot_general({' x '.join(operand_dtypes)}) with "
+                f"preferred_element_type={pref!r}; low-precision MXU "
+                f"inputs must accumulate in f32")]
+    return []
+
+
+def audit_precision(family: str, impl: str, shape: dict, op: str,
+                    dtype=jnp.bfloat16) -> list[Finding]:
+    """REPRO-J002: trace with low-precision inputs; every dot_general
+    fed a bf16/f16 operand must request f32 accumulation."""
+    try:
+        fn, args = _abstract_args(family, impl, shape, op, dtype)
+    except ValueError:
+        return []  # op not supported for this family (paged bwd)
+    return precision_findings(
+        fn, args, f"{family}.{impl}.{op} @ {_fmt_shape(shape)}")
+
+
+def audit_dtype_closure(family: str, impl: str, shape: dict,
+                        dtype) -> list[Finding]:
+    """REPRO-J003: the primary output must come back in the input dtype."""
+    fn, args = _abstract_args(family, impl, shape, "fwd", dtype)
+    out = jax.eval_shape(fn, *args)
+    primary = jax.tree_util.tree_leaves(out)[0]
+    if jnp.dtype(primary.dtype) != jnp.dtype(dtype):
+        return [Finding(
+            "REPRO-J003", f"{family}.{impl}.fwd @ {_fmt_shape(shape)}",
+            f"input dtype {jnp.dtype(dtype).name} -> output dtype "
+            f"{jnp.dtype(primary.dtype).name}")]
+    return []
+
+
+def _fmt_shape(shape: dict) -> str:
+    return ",".join(f"{k}={v}" for k, v in sorted(shape.items()))
+
+
+def _family_shape(family: str, overrides: dict) -> dict:
+    shape = _shape_at(overrides)
+    if family == "paged":
+        shape["page_size"] = 16
+    return shape
+
+
+def audit_family(family: str, impl: str, log=lambda s: None
+                 ) -> tuple[list[Finding], dict]:
+    """All jaxpr audits for one (family, impl).  Returns (findings,
+    coverage record)."""
+    findings: list[Finding] = []
+    audited_ops = ["fwd"]
+    trains = residual_supports_bwd(family, impl)
+    if trains:
+        audited_ops.append("fwdbwd")
+        findings += audit_residuals(family, impl)
+    for tag, overrides in AUDIT_SHAPES:
+        shape = _family_shape(family, overrides)
+        for dtype in AUDIT_DTYPES:
+            findings += audit_dtype_closure(family, impl, shape, dtype)
+        findings += audit_precision(family, impl, shape, "fwd")
+        if trains:
+            findings += audit_precision(family, impl, shape, "fwdbwd")
+    log(f"check,jaxpr,{family}.{impl},"
+        f"{'FAIL' if findings else 'ok'}")
+    coverage = {"family": family, "impl": impl, "ops": audited_ops,
+                "shapes": [tag for tag, _ in AUDIT_SHAPES],
+                "dtypes": [jnp.dtype(d).name for d in AUDIT_DTYPES]}
+    return findings, coverage
+
+
+def run(log=lambda s: None) -> tuple[list[Finding], list[dict]]:
+    """Audit every registered (family, impl) of the five kernel
+    families.  Returns (findings, coverage list)."""
+    findings: list[Finding] = []
+    coverage: list[dict] = []
+    for family in ("linear", "softmax", "gla", "ssd", "paged"):
+        for impl in ops.kernel_names(family):
+            f, c = audit_family(family, impl, log=log)
+            findings += f
+            coverage.append(c)
+    return findings, coverage

@@ -1,0 +1,196 @@
+"""Custom AST lint for repo-specific invariants ruff cannot express.
+
+Single-file, stdlib-`ast` based, no execution of the linted code.
+
+  REPRO-L001  `time.time` / `time.perf_counter` (call, reference, or
+              from-import) anywhere but `tune/timer.py`.  All timing
+              flows through `repro.tune.timer` (`measure` for kernel
+              benchmarking with its block_until_ready discipline,
+              `now`/`wallclock` for coarse spans and metadata stamps)
+              so a grep for timer imports finds every clock in the
+              repo and no ad-hoc benchmark bypasses device sync.
+  REPRO-L002  integer-literal tile constants in `kernels/*.py` outside
+              `defaults.py`: parameter defaults or module constants
+              named like chunk/block_q/block_k/pages_per_block must be
+              sourced from `kernels.defaults.DEFAULT_TILES` — a stray
+              literal silently escapes both the defaults table and the
+              autotuner.
+  REPRO-L003  `interpret=True` as a parameter default or a literal
+              keyword argument in non-test code.  Interpret mode is a
+              CPU validation device for tests/CI; production dispatch
+              selects it via the impl name ("pallas_interpret"), never
+              a hardcoded flag.
+
+Suppression: a line ending in `# repro: ignore[RULE]` is exempt from
+RULE (use sparingly; the docs require a justification comment).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from repro.check.findings import Finding
+
+LINT_ROOTS = ("src", "benchmarks", "examples")
+TIMER_HOME = os.path.join("tune", "timer.py")
+_TIME_ATTRS = {"time", "perf_counter"}
+_TILE_NAME = re.compile(
+    r"(^|_)(chunk|block_q|block_k|blk|bq|bk|pages_per_block|ppb)($|_)"
+    r"|(^|_)(chunk|block)s?$",
+    re.IGNORECASE)
+_SUPPRESS = re.compile(r"#\s*repro:\s*ignore\[([A-Z0-9-]+)\]")
+
+
+def _is_test_path(path: str) -> bool:
+    parts = os.path.normpath(path).split(os.sep)
+    return any(p in ("tests", "conftest.py") or p.startswith("test_")
+               for p in parts)
+
+
+def _suppressed(source_lines: list[str], lineno: int, rule: str) -> bool:
+    if 1 <= lineno <= len(source_lines):
+        m = _SUPPRESS.search(source_lines[lineno - 1])
+        return bool(m) and m.group(1) in (rule, rule.split("-")[-1])
+    return False
+
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.findings: list[Finding] = []
+        self.in_kernels = (os.sep + "kernels" + os.sep in path
+                           and not path.endswith("defaults.py"))
+        self.is_timer = path.endswith(TIMER_HOME)
+        self.is_test = _is_test_path(path)
+        # names bound by `import time as X` in this file
+        self.time_aliases: set[str] = set()
+
+    def _emit(self, rule: str, node: ast.AST, detail: str):
+        lineno = getattr(node, "lineno", 0)
+        if _suppressed(self.lines, lineno, rule):
+            return
+        self.findings.append(
+            Finding(rule, f"{self.path}:{lineno}", detail))
+
+    # -- L001 ---------------------------------------------------------------
+    def visit_Import(self, node: ast.Import):
+        for alias in node.names:
+            if alias.name == "time":
+                self.time_aliases.add(alias.asname or "time")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module == "time" and not self.is_timer:
+            for alias in node.names:
+                if alias.name in _TIME_ATTRS:
+                    self._emit("REPRO-L001", node,
+                               f"from time import {alias.name}; use "
+                               f"repro.tune.timer instead")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if (not self.is_timer and node.attr in _TIME_ATTRS
+                and isinstance(node.value, ast.Name)
+                and node.value.id in self.time_aliases):
+            self._emit("REPRO-L001", node,
+                       f"{node.value.id}.{node.attr}; use "
+                       f"repro.tune.timer (measure/now/wallclock)")
+        self.generic_visit(node)
+
+    # -- L002 / L003 --------------------------------------------------------
+    def _check_defaults(self, node):
+        posargs = node.args.posonlyargs + node.args.args
+        defaults = node.args.defaults
+        pairs = list(zip(posargs[len(posargs) - len(defaults):], defaults))
+        pairs += [(a, d) for a, d in
+                  zip(node.args.kwonlyargs, node.args.kw_defaults)
+                  if d is not None]
+        for arg, default in pairs:
+            if (self.in_kernels and _TILE_NAME.search(arg.arg)
+                    and isinstance(default, ast.Constant)
+                    and type(default.value) is int):
+                self._emit("REPRO-L002", default,
+                           f"parameter {arg.arg}={default.value} "
+                           f"hardcodes a tile; source it from "
+                           f"kernels.defaults.DEFAULT_TILES")
+            if (not self.is_test and arg.arg == "interpret"
+                    and isinstance(default, ast.Constant)
+                    and default.value is True):
+                self._emit("REPRO-L003", default,
+                           f"def {node.name}(..., interpret=True) in "
+                           f"non-test code")
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        self._check_defaults(node)
+        self.generic_visit(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef):
+        self._check_defaults(node)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign):
+        if (self.in_kernels and isinstance(node.value, ast.Constant)
+                and type(node.value.value) is int):
+            for target in node.targets:
+                if (isinstance(target, ast.Name)
+                        and _TILE_NAME.search(target.id)):
+                    self._emit("REPRO-L002", node,
+                               f"{target.id} = {node.value.value} "
+                               f"hardcodes a tile constant; import it "
+                               f"from kernels/defaults.py")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        if not self.is_test:
+            for kw in node.keywords:
+                if (kw.arg == "interpret"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True):
+                    self._emit("REPRO-L003", kw.value,
+                               "interpret=True literal in non-test "
+                               "code; select the pallas_interpret impl "
+                               "by name instead")
+        self.generic_visit(node)
+
+
+def lint_file(path: str, source: str | None = None) -> list[Finding]:
+    if source is None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("REPRO-L001", f"{path}:{e.lineno or 0}",
+                        f"unparseable file: {e.msg}")]
+    lint = _FileLint(path, source)
+    lint.visit(tree)
+    return lint.findings
+
+
+def iter_source_files(root: str = ".") -> list[str]:
+    files = []
+    for base in LINT_ROOTS:
+        top = os.path.join(root, base)
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    files.append(os.path.join(dirpath, fn))
+    return files
+
+
+def run(root: str = ".", log=lambda s: None
+        ) -> tuple[list[Finding], list[dict]]:
+    findings: list[Finding] = []
+    files = iter_source_files(root)
+    for path in files:
+        if _is_test_path(path):
+            continue
+        findings += lint_file(path)
+    log(f"check,lint,{'FAIL' if findings else 'ok'} "
+        f"({len(files)} files)")
+    return findings, [{"pass": "lint", "files": len(files),
+                       "roots": list(LINT_ROOTS)}]

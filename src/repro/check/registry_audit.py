@@ -1,0 +1,93 @@
+"""Registry coverage + consistency audits.
+
+  REPRO-R001  every kernel family exposes the full impl set
+              {xla, pallas, pallas_interpret, ref} — the interpret impl
+              is how CI validates the pallas kernel on CPU, and the
+              ref oracle is what both are validated against, so a
+              family missing one has an unverifiable cell.
+  REPRO-R002  every mixer backend's capability flags match the methods
+              it actually overrides: a backend claiming
+              `supports_noncausal` without overriding `apply_noncausal`
+              dispatches to the base NotImplementedError at runtime
+              (and the inverse silently hides a working path from
+              encoder/cross-attention model selection).
+  REPRO-R003  a softmax-family impl registering a `bwd` must also
+              register the `fwd_res` that produces its residuals —
+              `ops.softmax_attention`'s custom VJP calls fwd_res for
+              any impl it will later call bwd on.
+"""
+from __future__ import annotations
+
+from repro.check.findings import Finding
+from repro.kernels import ops
+from repro.mixers import base as mixer_base
+
+FAMILIES = ("linear", "softmax", "gla", "ssd", "paged")
+REQUIRED_IMPLS = ("xla", "pallas", "pallas_interpret", "ref")
+
+# (flag, methods that must be overridden iff the flag is set)
+_CAPABILITIES = (
+    ("supports_noncausal", ("apply_noncausal",)),
+    ("supports_cross_decode", ("cross_precompute", "cross_decode")),
+)
+
+
+def check_kernel_registry() -> list[Finding]:
+    findings = []
+    for family in FAMILIES:
+        names = set(ops.kernel_names(family))
+        for impl in REQUIRED_IMPLS:
+            if impl not in names:
+                findings.append(Finding(
+                    "REPRO-R001", f"kernels/ops.py[{family}]",
+                    f"family registers {sorted(names)} but not "
+                    f"{impl!r}"))
+        if family == "softmax":
+            for name in names:
+                impl = ops.get_kernel(family, name)
+                if impl.bwd is not None and impl.fwd_res is None:
+                    findings.append(Finding(
+                        "REPRO-R003",
+                        f"kernels/ops.py[{family}.{name}]",
+                        "bwd registered without fwd_res; the custom "
+                        "VJP cannot produce this impl's residuals"))
+    return findings
+
+
+def _overrides(backend, method: str) -> bool:
+    base_fn = getattr(mixer_base.AttentionBackend, method)
+    return getattr(type(backend), method, base_fn) is not base_fn
+
+
+def check_mixer_flags() -> list[Finding]:
+    findings = []
+    for name, backend in sorted(mixer_base._BACKENDS.items()):
+        for flag, methods in _CAPABILITIES:
+            claimed = bool(getattr(backend, flag))
+            # a subclass may inherit the override from its parent
+            # backend class while re-declaring the flag (mixers/gla.py
+            # narrows GQAProjectionBackend); "overridden" therefore
+            # means "not the AttentionBackend base stub"
+            has = all(_overrides(backend, m) for m in methods)
+            if claimed and not has:
+                findings.append(Finding(
+                    "REPRO-R002", f"mixers[{name}]",
+                    f"{flag}=True but {methods} not overridden "
+                    f"(would raise NotImplementedError at dispatch)"))
+            elif has and not claimed and flag == "supports_cross_decode":
+                findings.append(Finding(
+                    "REPRO-R002", f"mixers[{name}]",
+                    f"{flag}=False but {methods} are implemented "
+                    f"(working path hidden from model selection)"))
+    return findings
+
+
+def run(log=lambda s: None) -> tuple[list[Finding], list[dict]]:
+    findings = check_kernel_registry() + check_mixer_flags()
+    coverage = [{"pass": "registry", "families": list(FAMILIES),
+                 "required_impls": list(REQUIRED_IMPLS),
+                 "mixers": sorted(mixer_base._BACKENDS)}]
+    log(f"check,registry,{'FAIL' if findings else 'ok'} "
+        f"({len(FAMILIES)} families, "
+        f"{len(mixer_base._BACKENDS)} mixers)")
+    return findings, coverage

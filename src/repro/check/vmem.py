@@ -1,0 +1,127 @@
+"""VMEM tile legality: defaults and tuning-cache entries vs the budget.
+
+Two invariants, checked against `tune.space.vmem_bytes_estimate` (the
+same structural model the sweep uses to reject candidates, so the
+analyzer and the autotuner cannot disagree about legality):
+
+  REPRO-V001  every default tile in `kernels/defaults.py` fits the
+              VMEM budget for every (architecture x shape) cell in
+              `configs/registry.py` — the untuned dispatch path must be
+              launchable on every registered workload.
+  REPRO-V002  every entry in a `TuningCache` file is structurally
+              valid (`tune.cache.validate`) and its tiles fit the
+              budget for the shape bucket they claim — a stale or
+              hand-edited cache must fail CI, not a TPU lowering.
+
+VMEM is a Pallas/TPU notion, so cache entries are budget-checked only
+for pallas/pallas_interpret impls; xla entries (e.g. the softmax scan
+chunk, whose working set scales with the full N) are schema-checked
+only.  Default tiles are checked for every family — defaults apply to
+the pallas path of each.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.check.findings import Finding
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, get_config
+from repro.kernels.defaults import DEFAULT_TILES
+from repro.tune import cache as tcache
+from repro.tune.space import VMEM_BUDGET, vmem_bytes_estimate
+
+DEFAULT_CACHE_PATHS = (tcache.DEFAULT_CACHE_PATH,)
+
+
+def registry_shapes() -> list[tuple[str, str, dict]]:
+    """Every (arch, shape_name, shape-dict) cell the repo registers.
+
+    Smoke configs keep this light (head counts and head_dim are the
+    architectural facts the VMEM model reads; smoke presets preserve
+    them scaled down only in depth/width, and full presets for the big
+    archs need no weights here — only dims — so use full).
+    """
+    cells = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for name, sc in SHAPES.items():
+            n = 1 if sc.kind == "decode" else sc.seq_len
+            shape = {"b": sc.global_batch, "h": cfg.num_heads,
+                     "hkv": cfg.num_kv_heads, "n": max(n, 1),
+                     "d": cfg.resolved_head_dim}
+            cells.append((arch, name, shape))
+    return cells
+
+
+def check_defaults(cells=None) -> list[Finding]:
+    """REPRO-V001 over the full (family x arch x shape) product."""
+    findings = []
+    cells = registry_shapes() if cells is None else cells
+    for family, tiles in DEFAULT_TILES.items():
+        for arch, shape_name, shape in cells:
+            fshape = dict(shape)
+            if family == "paged":
+                fshape["page_size"] = 16  # PagingCfg default
+            est = vmem_bytes_estimate(family, tiles, fshape)
+            if est > VMEM_BUDGET:
+                findings.append(Finding(
+                    "REPRO-V001",
+                    f"kernels/defaults.py[{family}] @ {arch}/{shape_name}",
+                    f"default tiles {tiles} need {est} B VMEM "
+                    f"(> budget {VMEM_BUDGET} B) at shape {fshape}"))
+    return findings
+
+
+def _bucket_shape(bucket: str) -> dict:
+    """Parse a `tune.cache.shape_bucket` string back into a shape dict."""
+    shape = {}
+    for part in bucket.split(","):
+        key, _, val = part.partition("=")
+        shape[key] = int(val)
+    return shape
+
+
+def check_cache_file(path: str) -> list[Finding]:
+    """REPRO-V002 for one tuning-cache file (missing file = no entries)."""
+    if not os.path.exists(path):
+        return []
+    try:
+        cache = tcache.TuningCache.load(path)
+    except (ValueError, OSError) as e:
+        return [Finding("REPRO-V002", path, str(e))]
+    findings = []
+    for key, entry in cache.entries.items():
+        if not entry["impl"].startswith("pallas"):
+            continue  # VMEM budgets only constrain the pallas impls
+        try:
+            shape = _bucket_shape(entry["shape_bucket"])
+            est = vmem_bytes_estimate(entry["family"], entry["tiles"],
+                                      shape)
+        except (KeyError, ValueError) as e:
+            findings.append(Finding(
+                "REPRO-V002", f"{path}[{key}]",
+                f"unusable entry: {e!r}"))
+            continue
+        if est > VMEM_BUDGET:
+            findings.append(Finding(
+                "REPRO-V002", f"{path}[{key}]",
+                f"cached tiles {entry['tiles']} need {est} B VMEM "
+                f"(> budget {VMEM_BUDGET} B) for bucket "
+                f"{entry['shape_bucket']}"))
+    return findings
+
+
+def run(cache_paths=DEFAULT_CACHE_PATHS, log=lambda s: None
+        ) -> tuple[list[Finding], list[dict]]:
+    cells = registry_shapes()
+    findings = check_defaults(cells)
+    log(f"check,vmem,defaults,{'FAIL' if findings else 'ok'} "
+        f"({len(DEFAULT_TILES)} families x {len(cells)} cells)")
+    for path in cache_paths:
+        f = check_cache_file(path)
+        findings += f
+        log(f"check,vmem,cache:{path},{'FAIL' if f else 'ok'}")
+    coverage = [{"pass": "vmem", "families": sorted(DEFAULT_TILES),
+                 "cells": len(cells),
+                 "caches": [p for p in cache_paths if os.path.exists(p)]}]
+    return findings, coverage

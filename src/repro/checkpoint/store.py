@@ -15,7 +15,7 @@ import hashlib
 import json
 import os
 import threading
-import time
+from repro.tune.timer import wallclock
 
 import jax
 import numpy as np
@@ -41,7 +41,7 @@ def save(path: str, tree, step: int, *, blocking: bool = True):
 
     def write():
         manifest = {"step": step, "treedef": str(treedef),
-                    "time": time.time(), "leaves": []}
+                    "time": wallclock(), "leaves": []}
         for i, arr in enumerate(host_leaves):
             fn = _leaf_name(i)
             np.save(os.path.join(tmp_dir, fn), arr)

@@ -22,13 +22,20 @@ kernel entry points (`la_fwd_pallas(chunk=...)`,
 `paged_attention_pallas(pages_per_block=...)`), and exactly the keys a
 tuning-cache entry may override at dispatch time (kernels/ops.py).
 
-Note the distinction from `ops.DEFAULT_CHUNK` (512): that is the
-CALLER-level scan granularity default recorded in `configs.base.LACfg`
-— how much work each chunked-scan iteration covers — while these are
-the KERNEL-level tile defaults used when a Pallas entry point is called
-without an explicit size.
+`DEFAULT_SCAN_CHUNK` (512, re-exported as `ops.DEFAULT_CHUNK`) is the
+one value that is NOT a kernel tile: it is the CALLER-level scan
+granularity default recorded in `configs.base.LACfg` — how much work
+each chunked-scan iteration covers — while the table entries are the
+KERNEL-level tile defaults used when a Pallas entry point is called
+without an explicit size.  It lives here with them because this module
+is the single home for size literals (repro.check lint REPRO-L002).
 """
 from __future__ import annotations
+
+# caller-level scan chunk (configs.base.LACfg.chunk mirrors it):
+# 512 tokens/chunk costs +3% intra-chunk flops vs 128 but 4x fewer scan
+# iterations -> -20% HBM traffic on train cells (EXPERIMENTS §Perf)
+DEFAULT_SCAN_CHUNK = 512
 
 DEFAULT_TILES: dict[str, dict[str, int]] = {
     # chunked-recurrence families: tokens per sequential grid step

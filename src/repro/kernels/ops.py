@@ -43,6 +43,7 @@ from repro.core import ssd as _ssd
 from repro.core.chunked import LAState, init_state, la_decode_step, la_noncausal
 from repro.core.gla import GLAState, init_gla_state
 from repro.kernels import ref as _ref
+from repro.kernels.defaults import DEFAULT_SCAN_CHUNK, DEFAULT_TILES
 
 __all__ = [
     "KernelImpl", "register_kernel", "get_kernel", "kernel_names",
@@ -54,10 +55,9 @@ __all__ = [
     "set_tuning_cache", "get_tuning_cache", "tuned_tiles",
 ]
 
-# one chunk default everywhere (configs.base.LACfg is the schema of record):
-# 512 tokens/chunk costs +3% intra-chunk flops vs 128 but 4x fewer scan
-# iterations -> -20% HBM traffic on train cells (EXPERIMENTS §Perf)
-DEFAULT_CHUNK = 512
+# one chunk default everywhere (configs.base.LACfg is the schema of
+# record); the literal lives in kernels/defaults.py with the tile table
+DEFAULT_CHUNK = DEFAULT_SCAN_CHUNK
 
 
 def default_backend() -> str:
@@ -526,7 +526,9 @@ register_kernel("ssd", "ref", fwd=_ssd_ref_fwd)  # bwd: xla fallback
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(4, 5))
-def ssd_causal(q, k, v, log_decay, chunk: int = 128, backend: str = "auto"):
+def ssd_causal(q, k, v, log_decay,
+               chunk: int = DEFAULT_TILES["ssd"]["chunk"],
+               backend: str = "auto"):
     """SSD (Mamba-2) with the analytic O(N D) backward (training entry).
 
     q, k: (B, G, N, Dk) with G | H; v: (B, H, N, Dv); log_decay:

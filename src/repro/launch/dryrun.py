@@ -23,7 +23,7 @@ Usage:
 """
 import argparse
 import json
-import time
+from repro.tune.timer import now
 import traceback
 from functools import partial
 
@@ -149,10 +149,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
 
 def run_cell(arch, shape_name, multi_pod, smoke=False, verbose=True):
-    t0 = time.time()
+    t0 = now()
     compiled, r = lower_cell(arch, shape_name, multi_pod=multi_pod,
                              smoke=smoke)
-    dt = time.time() - t0
+    dt = now() - t0
     if verbose:
         print(f"[OK] {arch} x {shape_name} x {r.mesh}  "
               f"({dt:.1f}s compile)")

@@ -19,7 +19,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
-import time
+from repro.tune.timer import now
 
 import jax
 import numpy as np
@@ -116,14 +116,14 @@ def main():
                               size=args.prompt_len).tolist()
         engine.submit(Request(rid=rid, prompt=prompt,
                               max_new_tokens=args.max_new, sampling=sp))
-    t0 = time.perf_counter()
+    t0 = now()
     done, peak_pages = {}, 0
     for out in engine.stream():
         if engine.pool is not None:
             peak_pages = max(peak_pages, engine.pool.pages_in_use)
         if out.finished:
             done[out.rid] = engine.request(out.rid).generated
-    dt = time.perf_counter() - t0
+    dt = now() - t0
     total_tokens = sum(len(v) for v in done.values())
     record = {
         "arch": args.arch,

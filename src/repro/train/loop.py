@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import logging
 import statistics
-import time
+from repro.tune.timer import now
 
 import jax
 import numpy as np
@@ -104,7 +104,7 @@ class Trainer:
             batch_np = self.data_it.batch_at(self.step_idx)
             batch = {"tokens": batch_np} if isinstance(batch_np, np.ndarray) \
                 else batch_np
-            t0 = time.perf_counter()
+            t0 = now()
             try:
                 if fail_injector is not None:
                     fail_injector(self.step_idx)
@@ -128,7 +128,7 @@ class Trainer:
                     continue
                 continue
             retries = 0
-            dt = time.perf_counter() - t0
+            dt = now() - t0
             slow = self.monitor.record(dt)
             rec = {"step": self.step_idx, "loss": loss, "dt": dt,
                    "straggler": slow}

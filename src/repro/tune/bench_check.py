@@ -9,6 +9,12 @@ an `achieved_frac` key — whose VALUE may be null for unmeasured cells
 forgot the observability contract.  BENCH_autotune.json nests cells
 under sweeps[].candidates[]; BENCH_{flash,gla,paged}.json keep them in
 a top-level "cells" list.
+
+For sweep documents the winner is part of the contract too: each sweep
+must carry a "best" cell that passes the same roofline check, has a
+tiles dict, and whose median_ms actually is the minimum over the
+sweep's candidates — a best that no candidate backs means the sweep
+and its summary were produced by different code paths.
 """
 from __future__ import annotations
 
@@ -32,6 +38,28 @@ def check_cell(cell: dict, where: str) -> list[str]:
     return errors
 
 
+def check_best(sweep: dict, cands: list, where: str) -> list[str]:
+    """The sweep's recorded winner must be real: roofline-complete,
+    tile-carrying, and the true median_ms minimum of its candidates."""
+    best = sweep.get("best")
+    if not isinstance(best, dict):
+        return [f"{where}: missing best cell"]
+    errors = check_cell(best, f"{where}.best")
+    if not isinstance(best.get("tiles"), dict):
+        errors.append(f"{where}.best: tiles must be an object, "
+                      f"got {best.get('tiles')!r}")
+    medians = [c.get("median_ms") for c in cands
+               if isinstance(c.get("median_ms"), numbers.Real)]
+    bm = best.get("median_ms")
+    if not isinstance(bm, numbers.Real):
+        errors.append(f"{where}.best: median_ms must be a number, "
+                      f"got {bm!r}")
+    elif medians and bm > min(medians):
+        errors.append(f"{where}.best: median_ms {bm} is not the "
+                      f"candidate minimum {min(medians)}")
+    return errors
+
+
 def check_doc(doc: dict, name: str) -> list[str]:
     errors = []
     cells = doc.get("cells")
@@ -51,6 +79,7 @@ def check_doc(doc: dict, name: str) -> list[str]:
             for j, cand in enumerate(cands):
                 errors += check_cell(
                     cand, f"{name} sweeps[{i}].candidates[{j}]")
+            errors += check_best(sweep, cands, f"{name} sweeps[{i}]")
     if cells is None and sweeps is None:
         errors.append(f"{name}: neither 'cells' nor 'sweeps' present")
     return errors

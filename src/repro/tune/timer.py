@@ -44,6 +44,23 @@ class Measurement:
         return dataclasses.asdict(self)
 
 
+def now() -> float:
+    """Monotonic seconds for elapsed-span arithmetic (train-loop step
+    timing, serve latency).  The repo's only perf_counter outside
+    `measure` — repro.check lint rule REPRO-L001 keeps it that way.
+
+    Spans measured with `now()` include async-dispatch queueing unless
+    the caller synchronizes; for kernel numbers use `measure`.
+    """
+    return time.perf_counter()
+
+
+def wallclock() -> float:
+    """Epoch seconds for metadata stamps (checkpoint manifests, report
+    headers) — NOT for durations; use `now()` spans for those."""
+    return time.time()
+
+
 def measure(fn: Callable[..., Any], *args, reps: int = 5,
             warmup: int = 1, **kwargs) -> Measurement:
     """Time `fn(*args, **kwargs)`: `warmup` untimed calls (compile),

@@ -1,0 +1,198 @@
+"""repro.check analyzer tests: seeded defects, clean repo, CLI report.
+
+The three seeded-defect fixtures (check/fixtures.py) each violate
+exactly one kernel contract and must produce exactly that rule ID —
+they are the proof the analyzer would catch a real regression.  The
+clean-repo runs pin the acceptance criterion (`--strict` exits 0) per
+pass, so a regression names the pass that broke.
+"""
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.check import bounds, fixtures, jaxpr_audit, lint
+from repro.check import registry_audit, vmem
+from repro.check.findings import RULES, Finding
+from repro.check.__main__ import run_all
+from repro.tune import bench_check
+
+_silent = lambda s: None  # noqa: E731 — quiet pass logs in tests
+
+
+def rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# Seeded defects: each fires exactly its own rule
+# ---------------------------------------------------------------------------
+
+def test_oob_index_map_fixture_fires_b001():
+    assert rules_of(fixtures.audit_oob_fixture()) == ["REPRO-B001"]
+
+
+def test_quadratic_residual_fixture_fires_j001():
+    assert rules_of(
+        fixtures.audit_quadratic_residual_fixture()) == ["REPRO-J001"]
+
+
+def test_unguarded_bf16_fixture_fires_j002():
+    assert rules_of(fixtures.audit_bf16_fixture()) == ["REPRO-J002"]
+
+
+def test_dropped_tail_grid_fires_b002():
+    """A grid one step short of the extent drops the last output block."""
+    import jax
+    from jax.experimental import pallas as pl
+
+    def short_copy(x, block=16):
+        return pl.pallas_call(
+            fixtures._copy_kernel,
+            grid=(x.shape[0] // block - 1,),  # one block short
+            in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        )(x)
+
+    with bounds.record_launches() as launches:
+        short_copy(jnp.zeros((64,), jnp.float32))
+    findings = [f for la in launches for f in bounds.check_launch(la)]
+    assert rules_of(findings) == ["REPRO-B002"]
+
+
+def test_partial_block_fires_b003():
+    """A block that does not divide the extent is flagged."""
+    import jax
+    from jax.experimental import pallas as pl
+
+    def ragged_copy(x, block=24):
+        return pl.pallas_call(
+            fixtures._copy_kernel,
+            grid=(2,),
+            in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        )(x)
+
+    with bounds.record_launches() as launches:
+        ragged_copy(jnp.zeros((60,), jnp.float32))
+    findings = [f for la in launches for f in bounds.check_launch(la)]
+    assert "REPRO-B003" in rules_of(findings)
+
+
+# ---------------------------------------------------------------------------
+# Clean repo: every pass returns zero findings
+# ---------------------------------------------------------------------------
+
+def test_registry_audit_clean():
+    findings, coverage = registry_audit.run(log=_silent)
+    assert findings == []
+    assert coverage[0]["families"] == list(registry_audit.FAMILIES)
+
+
+def test_lint_clean():
+    findings, _ = lint.run(log=_silent)
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_vmem_clean():
+    findings, coverage = vmem.run(log=_silent)
+    assert findings == []
+    assert coverage[0]["cells"] > 0
+
+
+def test_bounds_clean_all_families():
+    findings, coverage = bounds.run(log=_silent)
+    assert findings == [], [str(f) for f in findings]
+    assert {c["family"] for c in coverage} == set(bounds.DRIVERS)
+
+
+def test_jaxpr_clean_and_covers_registry():
+    findings, coverage = jaxpr_audit.run(log=_silent)
+    assert findings == [], [str(f) for f in findings]
+    # acceptance: all 5 families x every registered impl audited
+    from repro.kernels import ops
+    audited = {(c["family"], c["impl"]) for c in coverage}
+    expected = {(fam, impl)
+                for fam in ("linear", "softmax", "gla", "ssd", "paged")
+                for impl in ops.kernel_names(fam)}
+    assert audited == expected
+
+
+# ---------------------------------------------------------------------------
+# Analyzer plumbing
+# ---------------------------------------------------------------------------
+
+def test_finding_rejects_unknown_rule():
+    with pytest.raises(KeyError):
+        Finding("REPRO-X999", "nowhere", "nothing")
+
+
+def test_report_shape(tmp_path):
+    report = run_all(only={"registry", "lint"}, log=_silent)
+    assert report["clean"] is True
+    assert report["findings"] == []
+    assert set(report["rules"]) == set(RULES)
+    path = tmp_path / "CHECK.json"
+    path.write_text(json.dumps(report))
+    assert json.loads(path.read_text())["version"] == 1
+
+
+def test_lint_suppression_comment():
+    src = ("import time\n"
+           "t = time.perf_counter()  # repro: ignore[REPRO-L001]\n")
+    assert lint.lint_file("src/repro/fake.py", src) == []
+    src_hot = "import time\nt = time.perf_counter()\n"
+    assert rules_of(lint.lint_file("src/repro/fake.py", src_hot)) \
+        == ["REPRO-L001"]
+
+
+def test_lint_interpret_default_l003():
+    src = "def f(x, interpret=True):\n    return x\n"
+    assert rules_of(lint.lint_file("src/repro/fake.py", src)) \
+        == ["REPRO-L003"]
+    # tests are exempt: interpret mode is their job
+    assert lint.lint_file("tests/test_fake.py", src) == []
+
+
+def test_vmem_flags_oversized_cache_entry(tmp_path):
+    from repro.tune.cache import TuningCache
+    cache = TuningCache(path=str(tmp_path / "tune_cache.json"))
+    cache.put("softmax", "pallas", "fwd",
+              {"b": 1, "h": 2, "hkv": 2, "n": 1024, "d": 4096},
+              jnp.float32, {"block_q": 512, "block_k": 512})
+    path = cache.save()
+    findings = vmem.check_cache_file(path)
+    assert rules_of(findings) == ["REPRO-V002"]
+
+
+# ---------------------------------------------------------------------------
+# bench_check best-cell validation (satellite)
+# ---------------------------------------------------------------------------
+
+def _sweep_doc(best_ms):
+    roof = {"t_roofline_s": 1e-3, "achieved_frac": None}
+    cand = {"tiles": {"chunk": 64}, "median_ms": 1.0, "roofline": roof}
+    return {"sweeps": [{"candidates": [cand],
+                        "best": {"tiles": {"chunk": 64},
+                                 "median_ms": best_ms,
+                                 "roofline": roof}}]}
+
+
+def test_bench_check_accepts_true_best():
+    assert bench_check.check_doc(_sweep_doc(1.0), "doc") == []
+
+
+def test_bench_check_rejects_fake_best():
+    errors = bench_check.check_doc(_sweep_doc(2.0), "doc")
+    assert any("not the candidate minimum" in e for e in errors)
+
+
+def test_bench_check_requires_best():
+    doc = _sweep_doc(1.0)
+    del doc["sweeps"][0]["best"]
+    errors = bench_check.check_doc(doc, "doc")
+    assert any("missing best cell" in e for e in errors)
