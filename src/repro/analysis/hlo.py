@@ -285,6 +285,69 @@ def count_ops(hlo_text: str, opname: str) -> int:
     return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
 
 
+# ---------------------------------------------------------------------------
+# Buffer-donation aliasing (serving decode step)
+# ---------------------------------------------------------------------------
+
+# one aliasing entry: {output_index}: (param_number, {param_index}, kind)
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{([\d,\s]*)\},\s*([\w-]+)\)")
+
+
+def _index_tuple(s: str) -> tuple:
+    return tuple(int(x) for x in s.split(",") if x.strip())
+
+
+def input_output_aliases(hlo_text: str) -> list[dict]:
+    """ENTRY input->output aliasing pairs of a compiled module.
+
+    Parses the `input_output_alias={ {1}: (0, {}, may-alias), ... }`
+    header XLA emits when inputs are donated (jit donate_argnums) and
+    buffer assignment accepted the donation.  Returns one dict per pair:
+    {"output_index": tuple, "param_number": int, "param_index": tuple,
+    "kind": str}.  Empty list: nothing aliased — every donated buffer
+    was silently copied.
+    """
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return []
+    i = hlo_text.index("{", start)
+    depth, j = 0, i
+    while j < len(hlo_text):
+        if hlo_text[j] == "{":
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    body = hlo_text[i + 1:j]
+    return [{"output_index": _index_tuple(m.group(1)),
+             "param_number": int(m.group(2)),
+             "param_index": _index_tuple(m.group(3)),
+             "kind": m.group(4)}
+            for m in _ALIAS_ENTRY_RE.finditer(body)]
+
+
+def assert_cache_donation(compiled, min_leaves: int = 1) -> list[dict]:
+    """Assert a compiled step aliases >= min_leaves inputs to outputs.
+
+    The serving engine donates the decode cache (jit donate_argnums) so
+    XLA updates the KV / state arenas in place instead of copying them
+    every token; this is the pin that the donation actually survived
+    compilation.  Accepts a jax `Compiled` object or HLO text; returns
+    the parsed alias entries.
+    """
+    text = compiled if isinstance(compiled, str) else compiled.as_text()
+    aliases = input_output_aliases(text)
+    if len(aliases) < min_leaves:
+        raise AssertionError(
+            f"expected >= {min_leaves} input->output aliasing pairs "
+            f"(donated decode cache) in the compiled module, found "
+            f"{len(aliases)}: {aliases}")
+    return aliases
+
+
 def top_bytes_sites(text: str, k: int = 15) -> list:
     """Largest HBM-traffic instructions weighted by loop multipliers,
     using the same alias-aware model as total_costs (perf-work tool)."""

@@ -122,6 +122,24 @@ def attention_costs(family: str, shape: dict, op: str = "fwd",
         flops = 2.0 * 2.0 * b * h * n * d
         nbytes = itemsize * (2.0 * b * h * d              # q, o rows
                              + 2.0 * b * hkv * n * d)     # K/V pages
+    elif family in ("linear_decode_fused", "gla_decode_fused"):
+        # one-token fused recurrent step: the f32 state page crosses HBM
+        # exactly once each way (read + in-place write); the k^T v_aug
+        # rank-1 update and the grouped q·S readout are the only matmuls
+        flops = 2.0 * b * hkv * d * (d + 1) \
+            + 2.0 * b * h * d * (d + 1)
+        nbytes = 4.0 * 2.0 * b * hkv * (d * (d + 1) + (d + 1)) \
+            + itemsize * (2.0 * b * h * d               # q, o rows
+                          + 2.0 * b * hkv * d)          # k, v rows
+        if family == "gla_decode_fused":
+            nbytes += itemsize * b * hkv                # log-decay
+    elif family in ("softmax_decode_fused", "paged_decode_fused"):
+        # same streaming traffic as the unfused decode kernels, minus
+        # the (B, H, D) accumulator round trip the fused epilogue keeps
+        # in VMEM; n is the padded context (pmax * page_size for paged)
+        flops = 2.0 * 2.0 * b * h * n * d
+        nbytes = itemsize * (2.0 * b * h * d              # q, o rows
+                             + 2.0 * b * hkv * n * d)     # K/V stream
     else:
         raise KeyError(f"no cost model for kernel family {family!r}")
     if op == "bwd":

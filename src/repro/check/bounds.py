@@ -268,12 +268,65 @@ def _drive_paged():
                                   pages_per_block=ppb)
 
 
+def _drive_linear_decode_fused():
+    from repro.kernels import decode_fused as df
+    b, h, hkv, d = 3, 4, 2, 8
+    s = _rand(0, (b, hkv, d, d + 1))
+    p = _rand(1, (b, hkv, d + 1))
+    q = _rand(2, (b, h, d))
+    k, v = (_rand(3 + i, (b, hkv, d)) for i in range(2))
+    df.la_decode_fused_pallas(s, p, q, k, v, 1.0, 1.0)
+    # MHA (group of 1) uses the same grid with g == h // hkv == 1
+    df.la_decode_fused_pallas(s[:, :1], p[:, :1], q[:, :1], k[:, :1],
+                              v[:, :1], 1.0, 1.0)
+
+
+def _drive_gla_decode_fused():
+    from repro.kernels import decode_fused as df
+    b, h, hkv, d = 3, 4, 2, 8
+    s = _rand(0, (b, hkv, d, d + 1))
+    p = _rand(1, (b, hkv, d + 1))
+    q = _rand(2, (b, h, d))
+    k, v = (_rand(3 + i, (b, hkv, d)) for i in range(2))
+    ld = -jnp.abs(_rand(5, (b, hkv))) * 0.1
+    df.gla_decode_fused_pallas(s, p, q, k, v, ld, 1.0, 1.0)
+
+
+def _drive_softmax_decode_fused():
+    from repro.kernels import decode_fused as df
+    b, h, hkv, d, n = 3, 4, 2, 8, 50
+    q = _rand(0, (b, h, 1, d))
+    k, v = (_rand(1 + i, (b, hkv, n, d)) for i in range(2))
+    # ragged lengths incl. an empty slot; block_k both dividing the
+    # padded extent and forcing a padded tail past the true S
+    lens = jnp.array([0, 12, n], jnp.int32)
+    for bk in (16, 32):
+        df.softmax_decode_fused_pallas(q, k, v, lens, block_k=bk)
+
+
+def _drive_paged_decode_fused():
+    from repro.kernels import decode_fused as df
+    b, h, hkv, ps, d, pmax = 3, 4, 2, 8, 8, 5
+    num_pages = b * pmax + 1  # + the engine's sink page (id 0)
+    q = _rand(0, (b, h, 1, d))
+    kp, vp = (_rand(1 + i, (num_pages, hkv, ps, d)) for i in range(2))
+    pt = 1 + jnp.arange(b * pmax, dtype=jnp.int32).reshape(b, pmax)
+    lens = jnp.array([0, 12, pmax * ps], jnp.int32)
+    for ppb in (1, 2):
+        df.paged_decode_fused_pallas(q, kp, vp, pt, lens,
+                                     pages_per_block=ppb)
+
+
 DRIVERS = {
     "softmax": _drive_flash,
     "linear": _drive_linear,
     "gla": _drive_gla,
     "ssd": _drive_ssd,
     "paged": _drive_paged,
+    "linear_decode_fused": _drive_linear_decode_fused,
+    "gla_decode_fused": _drive_gla_decode_fused,
+    "softmax_decode_fused": _drive_softmax_decode_fused,
+    "paged_decode_fused": _drive_paged_decode_fused,
 }
 
 

@@ -228,7 +228,7 @@ def _fmt_shape(shape: dict) -> str:
 
 def _family_shape(family: str, overrides: dict) -> dict:
     shape = _shape_at(overrides)
-    if family == "paged":
+    if family in ("paged", "paged_decode_fused"):
         shape["page_size"] = 16
     return shape
 
@@ -263,7 +263,9 @@ def run(log=lambda s: None) -> tuple[list[Finding], list[dict]]:
     families.  Returns (findings, coverage list)."""
     findings: list[Finding] = []
     coverage: list[dict] = []
-    for family in ("linear", "softmax", "gla", "ssd", "paged"):
+    for family in ("linear", "softmax", "gla", "ssd", "paged",
+                   "linear_decode_fused", "gla_decode_fused",
+                   "softmax_decode_fused", "paged_decode_fused"):
         for impl in ops.kernel_names(family):
             f, c = audit_family(family, impl, log=log)
             findings += f

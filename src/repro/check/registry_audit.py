@@ -22,7 +22,9 @@ from repro.check.findings import Finding
 from repro.kernels import ops
 from repro.mixers import base as mixer_base
 
-FAMILIES = ("linear", "softmax", "gla", "ssd", "paged")
+FAMILIES = ("linear", "softmax", "gla", "ssd", "paged",
+            "linear_decode_fused", "gla_decode_fused",
+            "softmax_decode_fused", "paged_decode_fused")
 REQUIRED_IMPLS = ("xla", "pallas", "pallas_interpret", "ref")
 
 # (flag, methods that must be overridden iff the flag is set)

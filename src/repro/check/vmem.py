@@ -60,7 +60,7 @@ def check_defaults(cells=None) -> list[Finding]:
     for family, tiles in DEFAULT_TILES.items():
         for arch, shape_name, shape in cells:
             fshape = dict(shape)
-            if family == "paged":
+            if family in ("paged", "paged_decode_fused"):
                 fshape["page_size"] = 16  # PagingCfg default
             est = vmem_bytes_estimate(family, tiles, fshape)
             if est > VMEM_BUDGET:

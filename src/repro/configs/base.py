@@ -25,6 +25,12 @@ class LACfg:
     # paper §2.2: (a, b) as LEARNABLE per-layer parameters instead of
     # the fixed Taylor coefficients (1, 1)
     learnable_coeffs: bool = False
+    # route decode through the fused single-kernel step families
+    # (kernels/decode_fused.py) on backends that declare
+    # supports_fused_decode; False pins the legacy unfused composition
+    # (the fused families' xla impls are that composition, so on xla
+    # the two settings are byte-identical — docs/fused_decode.md)
+    fused_decode: bool = True
 
 
 @dataclasses.dataclass(frozen=True)

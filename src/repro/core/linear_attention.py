@@ -50,9 +50,16 @@ def la_attention_decode(state: LAState, q, k, v, cfg: LACfg = LACfg()):
     """Serving decode: one token.  q: (B, H, D); k, v: (B, Hkv, D).
 
     O(D^2) per token — context length only enters through the state.
+    cfg.fused_decode routes through the fused single-kernel step family
+    (state update + q·S + normalizer divide in one Pallas kernel on the
+    pallas impls); the normalization stays HERE so fused and unfused
+    see identical q/k.
     """
     if cfg.normalize_qk:
         q, k = l2_normalize(q), l2_normalize(k)
+    if cfg.fused_decode:
+        return _ops.la_decode_step_fused(state, q, k, v, cfg.a, cfg.b,
+                                         backend=cfg.backend)
     return _ops.la_decode_step(state, q, k, v, cfg.a, cfg.b)
 
 

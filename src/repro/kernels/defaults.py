@@ -46,6 +46,12 @@ DEFAULT_TILES: dict[str, dict[str, int]] = {
     "softmax": {"block_q": 128, "block_k": 128},
     # paged decode: KV pages fetched + processed per sequential grid step
     "paged": {"pages_per_block": 1},
+    # fused decode epilogues (kernels/decode_fused.py): the contiguous
+    # softmax variant streams the cache in block_k-key blocks, the paged
+    # variant reuses the pages_per_block walk; the linear/gla fused
+    # steps are one grid cell per (slot, kv head) and have no tile
+    "softmax_decode_fused": {"block_k": 128},
+    "paged_decode_fused": {"pages_per_block": 1},
 }
 
 

@@ -53,6 +53,8 @@ __all__ = [
     "gla_prefill", "gla_decode_step", "LAState", "init_state",
     "GLAState", "init_gla_state", "default_backend", "DEFAULT_CHUNK",
     "set_tuning_cache", "get_tuning_cache", "tuned_tiles",
+    "la_decode_step_fused", "gla_decode_step_fused",
+    "softmax_decode_fused", "paged_attention_fused",
 ]
 
 # one chunk default everywhere (configs.base.LACfg is the schema of
@@ -660,6 +662,157 @@ def gla_decode_step(state: GLAState, q, k, v, log_decay, a: float = 1.0,
                     b: float = 1.0):
     """One-token GLA decode: O(D^2), context enters only via the state."""
     return _gla.gla_decode_step(state, q, k, v, log_decay, a, b)
+
+
+# ---------------------------------------------------------------------------
+# Fused-decode families (kernels/decode_fused.py — ROADMAP "fused
+# epilogues"): one Pallas kernel per decode step that keeps the
+# normalizer / finalize divide (and GLA's gate, and the GQA head-fold)
+# inside the kernel.  The xla/ref impls ARE the unfused compositions,
+# so the fallback is byte-identical by construction; mixers route here
+# by capability flag (cfg.la.fused_decode).  Decode never trains: no
+# bwd on any of these families.
+# ---------------------------------------------------------------------------
+
+def _la_decode_unfused(state, q, k, v, a, b):
+    return _chunked.la_decode_step(state, q, k, v, a, b)
+
+
+def _la_decode_fused_pallas(interpret):
+    def fwd(state, q, k, v, a, b):
+        from repro.kernels import decode_fused as _df
+        s, p, o = _df.la_decode_fused_pallas(state.s, state.p, q, k, v,
+                                             a, b, interpret=interpret)
+        return LAState(s, p), o
+    return fwd
+
+
+register_kernel("linear_decode_fused", "xla", fwd=_la_decode_unfused)
+register_kernel("linear_decode_fused", "ref", fwd=_la_decode_unfused)
+register_kernel("linear_decode_fused", "pallas",
+                fwd=_la_decode_fused_pallas(False))
+register_kernel("linear_decode_fused", "pallas_interpret",
+                fwd=_la_decode_fused_pallas(True))
+
+
+def la_decode_step_fused(state: LAState, q, k, v, a: float = 1.0,
+                         b: float = 1.0, *, backend: str = "auto"):
+    """One-token LA decode through the fused registry family.
+
+    Same contract as `la_decode_step`; the pallas impls run the state
+    update, q·S, normalizer dot, and divide in ONE kernel with the
+    state donated in place (input_output_aliases), the xla/ref impls
+    are the unfused composition itself.
+    """
+    return get_kernel("linear_decode_fused", backend).fwd(
+        state, q, k, v, a, b)
+
+
+def _gla_decode_unfused(state, q, k, v, log_decay, a, b):
+    return _gla.gla_decode_step(state, q, k, v, log_decay, a, b)
+
+
+def _gla_decode_fused_pallas(interpret):
+    def fwd(state, q, k, v, log_decay, a, b):
+        from repro.kernels import decode_fused as _df
+        s, p, o = _df.gla_decode_fused_pallas(state.s, state.p, q, k, v,
+                                              log_decay, a, b,
+                                              interpret=interpret)
+        return GLAState(s, p), o
+    return fwd
+
+
+register_kernel("gla_decode_fused", "xla", fwd=_gla_decode_unfused)
+register_kernel("gla_decode_fused", "ref", fwd=_gla_decode_unfused)
+register_kernel("gla_decode_fused", "pallas",
+                fwd=_gla_decode_fused_pallas(False))
+register_kernel("gla_decode_fused", "pallas_interpret",
+                fwd=_gla_decode_fused_pallas(True))
+
+
+def gla_decode_step_fused(state: GLAState, q, k, v, log_decay,
+                          a: float = 1.0, b: float = 1.0, *,
+                          backend: str = "auto"):
+    """One-token GLA decode through the fused registry family: gate,
+    state update, q·S, and normalizer divide in one kernel."""
+    return get_kernel("gla_decode_fused", backend).fwd(
+        state, q, k, v, log_decay, a, b)
+
+
+def _softmax_decode_fused_shape(q, k) -> dict:
+    return {"b": q.shape[0], "h": q.shape[1], "hkv": k.shape[1],
+            "n": k.shape[2], "d": q.shape[3]}
+
+
+def _softmax_decode_fused_pallas(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
+    def fwd(q, k, v, lengths):
+        from repro.kernels import decode_fused as _df
+        from repro.kernels import defaults as _defaults
+        bk = _tile("softmax_decode_fused", impl, "fwd",
+                   _softmax_decode_fused_shape(q, k), q.dtype, "block_k",
+                   _defaults.DEFAULT_TILES["softmax_decode_fused"]["block_k"])
+        return _df.softmax_decode_fused_pallas(q, k, v, lengths,
+                                               block_k=bk,
+                                               interpret=interpret)
+    return fwd
+
+
+register_kernel("softmax_decode_fused", "xla", fwd=_softmax_decode_xla)
+register_kernel("softmax_decode_fused", "ref", fwd=_softmax_decode_xla)
+register_kernel("softmax_decode_fused", "pallas",
+                fwd=_softmax_decode_fused_pallas(False))
+register_kernel("softmax_decode_fused", "pallas_interpret",
+                fwd=_softmax_decode_fused_pallas(True))
+
+
+def softmax_decode_fused(q, k, v, lengths, *, backend: str = "auto"):
+    """Contiguous-cache softmax decode through the fused family.
+
+    Unlike `softmax_decode` (xla-only; pallas names fall back), the
+    fused family HAS a Pallas kernel for the contiguous cache — online
+    softmax over block_k-key blocks with the finalize divide and the
+    GQA head-fold inside.  A length-0 slot yields zeros on the pallas
+    impls (paged-family semantics); the xla/ref impls are byte-
+    identical to `softmax_decode`.
+    """
+    return get_kernel("softmax_decode_fused", backend).fwd(
+        q, k, v, lengths)
+
+
+def _paged_decode_fused_pallas(interpret):
+    impl = "pallas_interpret" if interpret else "pallas"
+
+    def fwd(q, k_pages, v_pages, page_table, lengths):
+        from repro.kernels import decode_fused as _df
+        from repro.kernels import defaults as _defaults
+        ppb = _tile("paged_decode_fused", impl, "fwd",
+                    _paged_shape(q, k_pages, page_table), q.dtype,
+                    "pages_per_block",
+                    _defaults.DEFAULT_TILES["paged_decode_fused"]["pages_per_block"])
+        return _df.paged_decode_fused_pallas(q, k_pages, v_pages,
+                                             page_table, lengths,
+                                             pages_per_block=ppb,
+                                             interpret=interpret)
+    return fwd
+
+
+register_kernel("paged_decode_fused", "xla", fwd=_paged_xla_fwd)
+register_kernel("paged_decode_fused", "ref", fwd=_paged_xla_fwd)
+register_kernel("paged_decode_fused", "pallas",
+                fwd=_paged_decode_fused_pallas(False))
+register_kernel("paged_decode_fused", "pallas_interpret",
+                fwd=_paged_decode_fused_pallas(True))
+
+
+def paged_attention_fused(q, k_pages, v_pages, page_table, lengths, *,
+                          backend: str = "auto"):
+    """Paged-KV decode through the fused family (GQA head-folded grid:
+    each arena page is DMA'd once per KV head, not once per query
+    head).  Same contract as `paged_attention`."""
+    return get_kernel("paged_decode_fused", backend).fwd(
+        q, k_pages, v_pages, page_table, lengths)
 
 
 # ---------------------------------------------------------------------------

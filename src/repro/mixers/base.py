@@ -46,6 +46,10 @@ class AttentionBackend:
     # that needs them fails fast instead of deep inside a jitted step
     supports_noncausal: bool = False   # apply_noncausal (encoder / cross)
     supports_cross_decode: bool = False  # cross_precompute / cross_decode
+    # decode() can route through the fused single-kernel decode-step
+    # families of kernels/decode_fused.py when cfg.la.fused_decode is
+    # set (the default); backends without a fused path ignore the flag
+    supports_fused_decode: bool = False
 
     # -- required ------------------------------------------------------
     def init(self, key, cfg, dtype):

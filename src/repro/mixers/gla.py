@@ -46,6 +46,9 @@ DECAY_BIAS = 6.0
 class GLAAttentionBackend(GQAProjectionBackend):
     # decay gating is a causal notion: no encoder / cross paths
     supports_noncausal = False
+    # decode can run gate + state update + normalizer divide in one
+    # fused kernel (kernels/decode_fused.py; docs/fused_decode.md)
+    supports_fused_decode = True
 
     def init(self, key, cfg, dtype=F32):
         k1, k2 = jax.random.split(key)
@@ -121,7 +124,13 @@ class GLAAttentionBackend(GQAProjectionBackend):
         la = cfg.la
         paged = isinstance(cache, PagedGLAState)
         st = self._gather_state(cache) if paged else cache
-        st, o = _ops.gla_decode_step(st, q[:, :, 0], k[:, :, 0],
-                                     v[:, :, 0], ld[:, :, 0], la.a, la.b)
+        if la.fused_decode and self.supports_fused_decode:
+            st, o = _ops.gla_decode_step_fused(
+                st, q[:, :, 0], k[:, :, 0], v[:, :, 0], ld[:, :, 0],
+                la.a, la.b, backend=la.backend)
+        else:
+            st, o = _ops.gla_decode_step(st, q[:, :, 0], k[:, :, 0],
+                                         v[:, :, 0], ld[:, :, 0],
+                                         la.a, la.b)
         cache = self._scatter_state(cache, st) if paged else st
         return self.out(p, o[:, :, None], compute_dtype), cache

@@ -29,6 +29,9 @@ F32 = jnp.float32
 @register_backend("linear")
 class LinearAttentionBackend(GQAProjectionBackend):
     supports_cross_decode = True
+    # decode routes through the fused single-kernel step family via
+    # la_attention_decode (cfg.la.fused_decode; docs/fused_decode.md)
+    supports_fused_decode = True
 
     def init(self, key, cfg, dtype=F32):
         p = super().init(key, cfg, dtype)

@@ -66,6 +66,10 @@ def _write_pages(pages, new, page_table, positions):
 
 @register_backend("softmax")
 class SoftmaxAttentionBackend(GQAProjectionBackend):
+    # decode can fold the finalize divide + GQA head-fold into the
+    # kernel epilogue (kernels/decode_fused.py; docs/fused_decode.md)
+    supports_fused_decode = True
+
     def apply(self, p, cfg, x, positions, compute_dtype=None):
         # every impl is trainable (flash v2 registered a custom vjp), so
         # cfg.la.backend flows straight through — "auto" = pallas on TPU
@@ -155,12 +159,18 @@ class SoftmaxAttentionBackend(GQAProjectionBackend):
                                      pos2d),
                 v_pages=_write_pages(cache.v_pages, v, cache.page_table,
                                      pos2d))
-            o = _ops.paged_attention(q, cache.k_pages, cache.v_pages,
-                                     cache.page_table, pos + 1,
-                                     backend=cfg.la.backend)
+            fused = cfg.la.fused_decode and self.supports_fused_decode
+            paged_decode = (_ops.paged_attention_fused if fused
+                            else _ops.paged_attention)
+            o = paged_decode(q, cache.k_pages, cache.v_pages,
+                             cache.page_table, pos + 1,
+                             backend=cfg.la.backend)
         else:
             cache = KVCache(k=_scatter_window(cache.k, k, pos),
                             v=_scatter_window(cache.v, v, pos))
-            o = _ops.softmax_decode(q, cache.k, cache.v, pos + 1,
-                                    backend=cfg.la.backend)
+            fused = cfg.la.fused_decode and self.supports_fused_decode
+            contig_decode = (_ops.softmax_decode_fused if fused
+                             else _ops.softmax_decode)
+            o = contig_decode(q, cache.k, cache.v, pos + 1,
+                              backend=cfg.la.backend)
         return self.out(p, o.astype(x.dtype), compute_dtype), cache

@@ -127,6 +127,7 @@ class Engine:
                  policy: Optional[AdmissionPolicy] = None,
                  prefill_chunk: Optional[int] = None,
                  kernel_backend: Optional[str] = None,
+                 fused_decode: Optional[bool] = None,
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None):
         if cfg.family == "encdec":
@@ -139,6 +140,14 @@ class Engine:
             cfg = dataclasses.replace(
                 cfg, la=dataclasses.replace(cfg.la,
                                             backend=kernel_backend))
+        if fused_decode is not None:
+            # deployment knob: route decode through the fused
+            # single-kernel step families (docs/fused_decode.md) or pin
+            # the legacy unfused composition — parity is tested via
+            # tests/helpers.assert_engine_identity
+            cfg = dataclasses.replace(
+                cfg, la=dataclasses.replace(cfg.la,
+                                            fused_decode=fused_decode))
         self.policy = policy if policy is not None else FixedSlots(max_slots)
         # paged-KV mode: PagedAdmission implies it (arena sized from the
         # byte budget); --page-size/--num-pages request it explicitly.
@@ -234,7 +243,13 @@ class Engine:
             toks, keys = smp.sample(logits, keys, temp, topk, topp)
             return toks, cache, keys
 
-        self._decode = jax.jit(decode_fn)
+        # the cache is DONATED: XLA updates the KV / state arenas in
+        # place instead of copying them every token (_decode_once
+        # immediately rebinds self.cache from the result, so the stale
+        # buffer is never touched).  analysis/hlo.py's
+        # assert_cache_donation pins that the aliasing survives
+        # compilation (tests/test_decode_fused.py).
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
         self._sample1 = jax.jit(smp.sample)   # prefill's first token
         self._prefill_fns: dict = {}          # (window_len, fresh) -> jit
 

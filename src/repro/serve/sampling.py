@@ -69,18 +69,31 @@ def sample(logits, keys, temperature, top_k, top_p):
 
     logits: (B, V); keys: (B, 2) uint32 per-slot PRNG keys; temperature /
     top_p: (B,) f32; top_k: (B,) int32.  Returns (tokens (B,) int32,
-    advanced keys (B, 2)).  Rows with temperature <= 0 return the exact
-    argmax; keys advance for every row so a request's stream depends
-    only on its own key, never on its neighbors.
+    keys (B, 2)).  Rows with temperature <= 0 return the exact argmax.
+
+    An ALL-greedy batch (the serving default) takes a `lax.cond` fast
+    path: no PRNG split, no filter/softmax/gumbel work — just the
+    argmax — and the keys pass through UNCHANGED (greedy rows never
+    consume randomness, so advancing their keys bought nothing).  In a
+    mixed batch every row's key advances, so a sampling request's
+    stream depends only on its own key, never on its batch neighbors.
     """
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    split = jax.vmap(jax.random.split)(keys)           # (B, 2, 2)
-    new_keys, subs = split[:, 0], split[:, 1]
-    filt = filter_logits(logits.astype(F32), top_k, top_p)
-    scaled = filt / jnp.maximum(temperature, 1e-6)[:, None]
-    drawn = jax.vmap(jax.random.categorical)(subs, scaled).astype(jnp.int32)
-    toks = jnp.where(temperature > 0, drawn, greedy)
-    return toks, new_keys
+
+    def _all_greedy(_):
+        return greedy, keys
+
+    def _mixed(_):
+        split = jax.vmap(jax.random.split)(keys)       # (B, 2, 2)
+        new_keys, subs = split[:, 0], split[:, 1]
+        filt = filter_logits(logits.astype(F32), top_k, top_p)
+        scaled = filt / jnp.maximum(temperature, 1e-6)[:, None]
+        drawn = jax.vmap(jax.random.categorical)(subs,
+                                                 scaled).astype(jnp.int32)
+        return jnp.where(temperature > 0, drawn, greedy), new_keys
+
+    return jax.lax.cond(jnp.all(temperature <= 0.0), _all_greedy, _mixed,
+                        None)
 
 
 def request_key(sp: SamplingParams, engine_seed: int, rid: int):

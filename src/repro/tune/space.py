@@ -54,6 +54,12 @@ def search_space(family: str, impl: str) -> dict[str, list[int]]:
         if pallas:
             return {"pages_per_block": list(_PPBS)}
         return {}  # the xla impl is gather-then-softmax, nothing to tile
+    if family in ("linear_decode_fused", "gla_decode_fused"):
+        return {}  # one-token step: the whole state page IS the tile
+    if family == "softmax_decode_fused":
+        return {"block_k": list(_BLOCKS)} if pallas else {}
+    if family == "paged_decode_fused":
+        return {"pages_per_block": list(_PPBS)} if pallas else {}
     raise KeyError(f"no search space for kernel family {family!r}")
 
 
@@ -82,6 +88,20 @@ def vmem_bytes_estimate(family: str, cand: dict, shape: dict) -> int:
         ppb = cand.get("pages_per_block", 1)
         # ppb K and V page blocks (ps, d) + q/acc rows
         return 4 * (2 * ppb * ps * d + 2 * d)
+    if family in ("linear_decode_fused", "gla_decode_fused"):
+        # state page (d, d+1) + normalizer (d+1) + q group / k / v / o rows
+        g = max(shape.get("h", 1) // max(shape.get("hkv", 1), 1), 1)
+        return 4 * (d * (d + 1) + (d + 1) + (2 * g + 2) * d)
+    if family == "softmax_decode_fused":
+        bk = cand.get("block_k", 128)
+        g = max(shape.get("h", 1) // max(shape.get("hkv", 1), 1), 1)
+        # k/v blocks (bk, d) + q/o/acc group rows + m/l vectors
+        return 4 * (2 * bk * d + 3 * g * d + 2 * g)
+    if family == "paged_decode_fused":
+        ps = shape.get("page_size", 16)
+        ppb = cand.get("pages_per_block", 1)
+        g = max(shape.get("h", 1) // max(shape.get("hkv", 1), 1), 1)
+        return 4 * (2 * ppb * ps * d + (3 * g + 2) * d)
     raise KeyError(f"no VMEM model for kernel family {family!r}")
 
 

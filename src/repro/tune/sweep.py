@@ -111,6 +111,60 @@ def build_problem(family: str, impl: str, shape: dict, op: str,
         def fwd(q):
             return ops.paged_attention(q, kp, vp, pt, lens, backend=impl)
         args = (qd,)
+    elif family in ("linear_decode_fused", "gla_decode_fused"):
+        if op != "fwd":
+            raise ValueError("fused decode is inference-only (op=fwd)")
+        b, h, hkv, d = shape["b"], shape["h"], shape["hkv"], shape["d"]
+        qd = (jax.random.normal(ks[0], (b, h, d)) * 0.3).astype(dtype)
+        kd = (jax.random.normal(ks[1], (b, hkv, d)) * 0.3).astype(dtype)
+        vd = jax.random.normal(ks[2], (b, hkv, d)).astype(dtype)
+        st = ops.init_state(b, hkv, d, d)
+        if family == "gla_decode_fused":
+            st = ops.init_gla_state(b, hkv, d, d)
+            ld = -jax.nn.softplus(
+                jax.random.normal(ks[3], (b, hkv))).astype(jnp.float32)
+
+            def fwd(q, k, v):
+                # only o: the f32 carried state is not a kernel output
+                # precision claim (it is f32 by contract)
+                return ops.gla_decode_step_fused(st, q, k, v, ld,
+                                                 backend=impl)[1]
+        else:
+            def fwd(q, k, v):
+                return ops.la_decode_step_fused(st, q, k, v,
+                                                backend=impl)[1]
+        args = (qd, kd, vd)
+    elif family == "softmax_decode_fused":
+        if op != "fwd":
+            raise ValueError("fused decode is inference-only (op=fwd)")
+        b, h, hkv = shape["b"], shape["h"], shape["hkv"]
+        n, d = shape["n"], shape["d"]
+        qd = (jax.random.normal(ks[0], (b, h, 1, d)) * 0.3).astype(dtype)
+        kc = (jax.random.normal(ks[1], (b, hkv, n, d)) * 0.3).astype(dtype)
+        vc = jax.random.normal(ks[2], (b, hkv, n, d)).astype(dtype)
+        lens = jnp.full((b,), n, jnp.int32)
+
+        def fwd(q):
+            return ops.softmax_decode_fused(q, kc, vc, lens, backend=impl)
+        args = (qd,)
+    elif family == "paged_decode_fused":
+        if op != "fwd":
+            raise ValueError("fused decode is inference-only (op=fwd)")
+        ps = shape.get("page_size", 16)
+        b, h, hkv, d = shape["b"], shape["h"], shape["hkv"], shape["d"]
+        pmax = max(-(-shape["n"] // ps), 1)
+        num_pages = b * pmax + 1
+        qd = (jax.random.normal(ks[0], (b, h, 1, d)) * 0.3).astype(dtype)
+        kp = (jax.random.normal(ks[1], (num_pages, hkv, ps, d))
+              * 0.3).astype(dtype)
+        vp = jax.random.normal(ks[2], (num_pages, hkv, ps, d)).astype(dtype)
+        pt = jnp.arange(b * pmax, dtype=jnp.int32).reshape(b, pmax)
+        lens = jnp.full((b,), pmax * ps, jnp.int32)
+
+        def fwd(q):
+            return ops.paged_attention_fused(q, kp, vp, pt, lens,
+                                             backend=impl)
+        args = (qd,)
     else:
         raise KeyError(f"no sweep problem for kernel family {family!r}")
 

@@ -113,11 +113,13 @@ def test_bounds_clean_all_families():
 def test_jaxpr_clean_and_covers_registry():
     findings, coverage = jaxpr_audit.run(log=_silent)
     assert findings == [], [str(f) for f in findings]
-    # acceptance: all 5 families x every registered impl audited
+    # acceptance: every family (incl. the fused decode ones) x every
+    # registered impl audited
+    from repro.check.registry_audit import FAMILIES
     from repro.kernels import ops
     audited = {(c["family"], c["impl"]) for c in coverage}
     expected = {(fam, impl)
-                for fam in ("linear", "softmax", "gla", "ssd", "paged")
+                for fam in FAMILIES
                 for impl in ops.kernel_names(fam)}
     assert audited == expected
 

@@ -1,0 +1,271 @@
+"""Fused single-kernel decode step (kernels/decode_fused.py).
+
+Kernel-level: every *_decode_fused registry family must match its
+unfused composition bitwise-closely across impls (xla /
+pallas_interpret), GQA groupings g ∈ {1, 4}, dtypes (f32 / bf16), both
+cache layouts (contiguous and paged), ragged lengths, and non-dividing
+tile choices.  Engine-level: greedy decode must be token-identical with
+fused_decode on vs off, the jitted decode step must donate its cache
+buffers (analysis.hlo.assert_cache_donation), and the all-greedy
+sampling fast path must neither consume PRNG keys nor change tokens.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import assert_engine_identity, backend_cfg
+from repro.kernels import ops
+
+F32 = jnp.float32
+IMPLS = ["xla", "pallas_interpret"]
+
+
+def _rand(key, shape, dtype=F32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+def _warm_state(b, hkv, d, gated=False, steps=3):
+    """A populated recurrent state: run a few unfused steps so the fused
+    step is tested against non-trivial s/p, not zeros."""
+    st = (ops.init_gla_state if gated else ops.init_state)(b, hkv, d, d)
+    for i in range(steps):
+        k = _rand(10 + i, (b, hkv, d)) * 0.3
+        v = _rand(20 + i, (b, hkv, d))
+        q = _rand(30 + i, (b, hkv, d)) * 0.3
+        if gated:
+            ld = -jnp.abs(_rand(40 + i, (b, hkv))) * 0.1
+            st, _ = ops.gla_decode_step(st, q, k, v, ld, 1.0, 1.0)
+        else:
+            st, _ = ops.la_decode_step(st, q, k, v, 1.0, 1.0)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Recurrent families: linear / gla
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("dtype", [F32, jnp.bfloat16])
+def test_linear_fused_matches_unfused(impl, g, dtype):
+    b, hkv, d = 3, 2, 8
+    h = hkv * g
+    st = _warm_state(b, hkv, d)
+    q = _rand(0, (b, h, d), dtype) * 0.3
+    k = _rand(1, (b, hkv, d), dtype) * 0.3
+    v = _rand(2, (b, hkv, d), dtype)
+    st_u, o_u = ops.la_decode_step(st, q, k, v, 1.0, 1.0)
+    st_f, o_f = ops.la_decode_step_fused(st, q, k, v, backend=impl)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(st_f.s), np.asarray(st_u.s),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(st_f.p), np.asarray(st_u.p),
+                               rtol=tol, atol=tol)
+    assert o_f.dtype == q.dtype
+    np.testing.assert_allclose(np.asarray(o_f, np.float32),
+                               np.asarray(o_u, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("dtype", [F32, jnp.bfloat16])
+def test_gla_fused_matches_unfused(impl, g, dtype):
+    b, hkv, d = 3, 2, 8
+    h = hkv * g
+    st = _warm_state(b, hkv, d, gated=True)
+    q = _rand(0, (b, h, d), dtype) * 0.3
+    k = _rand(1, (b, hkv, d), dtype) * 0.3
+    v = _rand(2, (b, hkv, d), dtype)
+    ld = -jnp.abs(_rand(3, (b, hkv))) * 0.1
+    st_u, o_u = ops.gla_decode_step(st, q, k, v, ld, 1.0, 1.0)
+    st_f, o_f = ops.gla_decode_step_fused(st, q, k, v, ld, backend=impl)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(st_f.s), np.asarray(st_u.s),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(st_f.p), np.asarray(st_u.p),
+                               rtol=tol, atol=tol)
+    assert o_f.dtype == q.dtype
+    np.testing.assert_allclose(np.asarray(o_f, np.float32),
+                               np.asarray(o_u, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_fused_state_dtype_stays_f32():
+    """The carried state is f32 by contract even when q/k/v are bf16."""
+    b, hkv, d = 2, 2, 8
+    st = _warm_state(b, hkv, d)
+    args = [_rand(i, (b, hkv, d), jnp.bfloat16) for i in range(3)]
+    st_f, _ = ops.la_decode_step_fused(st, *args,
+                                       backend="pallas_interpret")
+    assert st_f.s.dtype == F32 and st_f.p.dtype == F32
+
+
+# ---------------------------------------------------------------------------
+# Attention families: softmax (contiguous) / paged
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("dtype", [F32, jnp.bfloat16])
+def test_softmax_fused_matches_unfused(impl, g, dtype):
+    b, hkv, d, n = 3, 2, 8, 50
+    h = hkv * g
+    q = _rand(0, (b, h, 1, d), dtype) * 0.3
+    k = _rand(1, (b, hkv, n, d), dtype) * 0.3
+    v = _rand(2, (b, hkv, n, d), dtype)
+    lens = jnp.array([1, 12, n], jnp.int32)  # ragged, all >= 1
+    o_u = ops.softmax_decode(q, k, v, lens, backend="xla")
+    o_f = ops.softmax_decode_fused(q, k, v, lens, backend=impl)
+    assert o_f.dtype == q.dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_f, np.float32),
+                               np.asarray(o_u, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_k", [7, 16, 64])
+def test_softmax_fused_tile_tail(block_k):
+    """Non-dividing block_k: the padded tail past the true S must be
+    masked, not streamed into the online softmax."""
+    from repro.kernels import decode_fused as df
+    b, h, hkv, d, n = 2, 4, 2, 8, 50
+    q = _rand(0, (b, h, 1, d)) * 0.3
+    k = _rand(1, (b, hkv, n, d)) * 0.3
+    v = _rand(2, (b, hkv, n, d))
+    lens = jnp.array([5, n], jnp.int32)
+    o_u = ops.softmax_decode(q, k, v, lens, backend="xla")
+    o_f = df.softmax_decode_fused_pallas(q, k, v, lens, block_k=block_k,
+                                         interpret=True)
+    np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_u),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("dtype", [F32, jnp.bfloat16])
+def test_paged_fused_matches_unfused(impl, g, dtype):
+    b, hkv, ps, d, pmax = 3, 2, 8, 8, 5
+    h = hkv * g
+    num_pages = b * pmax + 1  # page 0 is the sink
+    q = _rand(0, (b, h, 1, d), dtype) * 0.3
+    kp = _rand(1, (num_pages, hkv, ps, d), dtype) * 0.3
+    vp = _rand(2, (num_pages, hkv, ps, d), dtype)
+    pt = 1 + jnp.arange(b * pmax, dtype=jnp.int32).reshape(b, pmax)
+    lens = jnp.array([1, 12, pmax * ps], jnp.int32)
+    o_u = ops.paged_attention(q, kp, vp, pt, lens, backend="xla")
+    o_f = ops.paged_attention_fused(q, kp, vp, pt, lens, backend=impl)
+    assert o_f.dtype == q.dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_f, np.float32),
+                               np.asarray(o_u, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_fused_ppb_tail():
+    """pages_per_block=2 with an odd page count: the virtual page in the
+    last block must contribute nothing."""
+    from repro.kernels import decode_fused as df
+    b, h, hkv, ps, d, pmax = 2, 4, 2, 8, 8, 5
+    num_pages = b * pmax + 1
+    q = _rand(0, (b, h, 1, d)) * 0.3
+    kp = _rand(1, (num_pages, hkv, ps, d)) * 0.3
+    vp = _rand(2, (num_pages, hkv, ps, d))
+    pt = 1 + jnp.arange(b * pmax, dtype=jnp.int32).reshape(b, pmax)
+    lens = jnp.array([12, pmax * ps], jnp.int32)
+    o_u = ops.paged_attention(q, kp, vp, pt, lens, backend="xla")
+    for ppb in (2, 3):
+        o_f = df.paged_decode_fused_pallas(q, kp, vp, pt, lens,
+                                           pages_per_block=ppb,
+                                           interpret=True)
+        np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_u),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Registry + dispatch
+# ---------------------------------------------------------------------------
+
+def test_fused_families_fully_registered():
+    for family in ("linear_decode_fused", "gla_decode_fused",
+                   "softmax_decode_fused", "paged_decode_fused"):
+        names = set(ops.kernel_names(family))
+        assert {"xla", "pallas", "pallas_interpret", "ref"} <= names, \
+            (family, names)
+
+
+def test_fused_xla_is_identical_composition():
+    """The claim the decode bench relies on: on xla the fused entry
+    points resolve to the very composition fused_decode=False runs."""
+    b, hkv, d = 2, 2, 8
+    st = _warm_state(b, hkv, d)
+    q, k, v = (_rand(i, (b, hkv, d)) for i in range(3))
+    st_u, o_u = ops.la_decode_step(st, q, k, v, 1.0, 1.0)
+    st_f, o_f = ops.la_decode_step_fused(st, q, k, v, backend="xla")
+    assert np.array_equal(np.asarray(o_f), np.asarray(o_u))
+    assert np.array_equal(np.asarray(st_f.s), np.asarray(st_u.s))
+
+
+# ---------------------------------------------------------------------------
+# Engine level: greedy identity, donation, sampling fast path
+# ---------------------------------------------------------------------------
+
+def _params(cfg):
+    from repro.models import model as mdl
+    return mdl.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("backend", ["linear", "gla", "softmax"])
+def test_engine_greedy_identity_fused_vs_unfused(backend):
+    cfg = backend_cfg(backend)
+    assert_engine_identity(cfg, _params(cfg), {}, {"fused_decode": False})
+
+
+def test_engine_greedy_identity_fused_vs_unfused_paged():
+    from repro.configs.base import PagingCfg
+    cfg = backend_cfg("softmax", paging=PagingCfg(page_size=16,
+                                                  num_pages=32))
+    assert_engine_identity(cfg, _params(cfg), {}, {"fused_decode": False})
+
+
+def test_engine_decode_donates_cache():
+    """The jitted decode step must alias the cache buffers in place —
+    a regression here doubles decode HBM residency."""
+    from repro.analysis.hlo import assert_cache_donation
+    from repro.serve.engine import Engine, Request
+    cfg = backend_cfg("linear")
+    eng = Engine(cfg, _params(cfg), max_len=32, eos_id=-1)
+    eng.submit(Request(rid=0, prompt=[3, 4, 5], max_new_tokens=2))
+    eng.run()
+    compiled = eng._decode.lower(
+        eng.params, eng.cache, jnp.asarray(eng.next_tokens),
+        jnp.asarray(eng._keys), jnp.asarray(eng._temp),
+        jnp.asarray(eng._topk), jnp.asarray(eng._topp)).compile()
+    assert_cache_donation(compiled)
+
+
+def test_sampling_greedy_fast_path_keys_and_tokens():
+    """All-greedy batches must return argmax tokens WITHOUT consuming
+    PRNG state; mixed batches still advance every key."""
+    from repro.serve.sampling import sample
+    b, v = 4, 16
+    logits = _rand(0, (b, v))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(b, dtype=jnp.uint32))
+    temp0 = jnp.zeros((b,))
+    topk = jnp.zeros((b,), jnp.int32)
+    topp = jnp.ones((b,))
+    toks, nk = jax.jit(sample)(logits, keys, temp0, topk, topp)
+    assert np.array_equal(np.asarray(toks),
+                          np.asarray(jnp.argmax(logits, -1)))
+    assert np.array_equal(np.asarray(nk), np.asarray(keys))
+    # different keys, same greedy batch -> identical tokens
+    keys2 = jax.vmap(jax.random.PRNGKey)(
+        jnp.arange(100, 100 + b, dtype=jnp.uint32))
+    toks2, _ = jax.jit(sample)(logits, keys2, temp0, topk, topp)
+    assert np.array_equal(np.asarray(toks), np.asarray(toks2))
+    # mixed batch: keys advance, the greedy row still gets argmax
+    tmix = temp0.at[1].set(0.8)
+    toks3, nk3 = jax.jit(sample)(logits, keys, tmix, topk, topp)
+    assert int(toks3[0]) == int(jnp.argmax(logits[0]))
+    assert not np.array_equal(np.asarray(nk3), np.asarray(keys))
