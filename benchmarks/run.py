@@ -15,6 +15,14 @@ paper's scaling claims (slopes) and memory ratios:
                       on the paper's pythia architecture (reduced scale)
   serve              — serving-engine tokens/s per backend + byte-budget
                       admission counts (O(D^2) state vs O(S) KV cache)
+  serve_lat          — serving latency DISTRIBUTIONS via repro.obs: a
+                      mixed long-prompt + short-chat workload traced
+                      through the engine per backend family (linear /
+                      gla / softmax / paged); emits
+                      artifacts/BENCH_serve.json with ttft +
+                      inter-token p50/p99 and mean slot occupancy per
+                      cell (kind "serve_lat" — bench_check validates
+                      the percentile schema instead of rooflines)
   flash              — softmax-baseline fwd+bwd, xla scan vs the flash
                       pallas kernel (flash v2 custom vjp) at N ∈ {1k,4k}
                       under GQA; emits artifacts/BENCH_flash.json.  On
@@ -290,6 +298,74 @@ def bench_serve(requests: int = 6, max_new: int = 8):
         print(f"serve,byte_budget_slots_{backend},{slots[backend]}")
     print(f"serve,admission_ratio_linear_over_softmax,"
           f"{slots['linear']/slots['softmax']:.1f}")
+
+
+def bench_serve_lat(json_path: str = "artifacts/BENCH_serve.json"):
+    """Serving latency distributions (docs/observability.md): run a
+    mixed workload — one long prompt amid short chat requests, chunked
+    prefill — through the engine with a repro.obs ServeTracer per
+    backend family, and record ttft / inter-token p50+p99, queue wait,
+    and mean slot occupancy.  The long prompt's chunked prefill stalls
+    the short requests' decode mid-stream, so inter-token p99 >> p50 is
+    the expected head-of-line baseline a future scheduler v2 improves.
+
+    All numbers are host wall-clock on whatever device runs the bench
+    (CPU in CI) — the artifact's contract is the SCHEMA (percentile
+    keys present, occupancy present), checked by tune/bench_check.py,
+    not absolute latency."""
+    import dataclasses
+    import json
+    import os
+
+    from repro.configs.registry import get_config
+    from repro.models import model as mdl
+    from repro.obs import ServeTracer
+    from repro.serve.engine import Engine, Request
+
+    max_len = 64
+    base = get_config("qwen2.5-3b", smoke=True)
+    # (cell name, attention backend, engine kwargs)
+    setups = [("linear", "linear", {}),
+              ("gla", "gla", {}),
+              ("softmax", "softmax", {}),
+              ("paged", "softmax", {"page_size": 16})]
+    # mixed workload: rid 0 is the long prompt (7 prefill windows at
+    # chunk 5); the short chats admitted alongside stall behind it
+    workload = [(0, 34, 8)] + [(rid, 6, 8) for rid in range(1, 6)]
+    rng = np.random.default_rng(0)
+    prompts = {rid: rng.integers(3, base.vocab_size, size=plen).tolist()
+               for rid, plen, _ in workload}
+    record = {"device": jax.default_backend(), "kind": "serve_lat",
+              "workload": [{"rid": r, "prompt_len": p, "max_new": m}
+                           for r, p, m in workload],
+              "cells": []}
+    for name, backend, extra in setups:
+        cfg = dataclasses.replace(base, attention_backend=backend)
+        params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+        tracer = ServeTracer()
+        engine = Engine(cfg, params, max_slots=2, max_len=max_len,
+                        eos_id=-1, prefill_chunk=5, tracer=tracer,
+                        **extra)
+        for rid, _, max_new in workload:
+            engine.submit(Request(rid=rid, prompt=prompts[rid],
+                                  max_new_tokens=max_new))
+        engine.run()
+        s = tracer.summary()
+        cell = {"impl": name, "backend": backend,
+                "requests": s["requests"], "tokens": s["tokens"],
+                "ttft_ms": s["ttft_ms"],
+                "inter_token_ms": s["inter_token_ms"],
+                "queue_wait_ms": s["queue_wait_ms"],
+                "occupancy": s["occupancy"], "steps": s["steps"]}
+        record["cells"].append(cell)
+        for metric in ("ttft_ms", "inter_token_ms"):
+            for p in ("p50", "p99"):
+                print(f"serve_lat,{name}_{metric}_{p},{s[metric][p]}")
+        print(f"serve_lat,{name}_occupancy,{s['occupancy']}")
+    os.makedirs(os.path.dirname(json_path), exist_ok=True)
+    with open(json_path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"serve_lat,json_artifact,{json_path}")
 
 
 def bench_flash(json_path: str = "artifacts/BENCH_flash.json"):
@@ -733,6 +809,7 @@ def bench_roofline():
 
 BENCHES = {"table1": bench_table1, "fig2": bench_fig2, "fig3": bench_fig3,
            "fig4": bench_fig4, "fig5": bench_fig5, "serve": bench_serve,
+           "serve_lat": bench_serve_lat,
            "flash": bench_flash, "gla": bench_gla, "paged": bench_paged,
            "decode": bench_decode, "tune": bench_tune,
            "roofline": bench_roofline}

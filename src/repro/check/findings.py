@@ -54,6 +54,11 @@ RULES: dict[str, str] = {
                   "defaults.py (chunk/block_q/block_k/pages_per_block)",
     "REPRO-L003": "interpret=True default or literal in non-test code "
                   "(interpret mode is a test/CI validation device)",
+    "REPRO-L004": "ad-hoc latency math in serve/ or obs/ outside "
+                  "obs/metrics.py: time.* clocks, np/statistics "
+                  "percentile/quantile/median calls, or sorted(...)[...] "
+                  "rank indexing (timestamps come from repro.tune.timer, "
+                  "percentiles from repro.obs.metrics)",
 }
 
 

@@ -20,6 +20,18 @@ Single-file, stdlib-`ast` based, no execution of the linted code.
               CPU validation device for tests/CI; production dispatch
               selects it via the impl name ("pallas_interpret"), never
               a hardcoded flag.
+  REPRO-L004  ad-hoc latency math inside `serve/` or `obs/` outside
+              `obs/metrics.py`: any `time.*` clock, an
+              `np/numpy/statistics` percentile / quantile / median
+              call (or from-import), or `sorted(...)[...]` rank
+              indexing.  The serving stack has exactly one clock
+              (`repro.tune.timer.now`) and one home for percentile
+              math (`repro.obs.metrics.percentiles` / `Histogram`) —
+              a second implementation drifts from the histogram's
+              inverted-CDF convention and silently disagrees with the
+              exported metrics.  `time.*` in serve/ fires L001 AND
+              L004 by design: one is the repo-wide timer rule, the
+              other the serving-observability contract.
 
 Suppression: a line ending in `# repro: ignore[RULE]` is exempt from
 RULE (use sparingly; the docs require a justification comment).
@@ -34,7 +46,15 @@ from repro.check.findings import Finding
 
 LINT_ROOTS = ("src", "benchmarks", "examples")
 TIMER_HOME = os.path.join("tune", "timer.py")
+METRICS_HOME = os.path.join("obs", "metrics.py")
 _TIME_ATTRS = {"time", "perf_counter"}
+# L004: every clock the time module offers, not just the two L001 bans
+_CLOCK_ATTRS = {"time", "perf_counter", "monotonic", "process_time",
+                "thread_time", "time_ns", "perf_counter_ns",
+                "monotonic_ns"}
+_PCT_MODULES = {"np", "numpy", "statistics"}
+_PCT_ATTRS = {"percentile", "nanpercentile", "quantile", "nanquantile",
+              "quantiles", "median", "nanmedian"}
 _TILE_NAME = re.compile(
     r"(^|_)(chunk|block_q|block_k|blk|bq|bk|pages_per_block|ppb)($|_)"
     r"|(^|_)(chunk|block)s?$",
@@ -64,6 +84,11 @@ class _FileLint(ast.NodeVisitor):
                            and not path.endswith("defaults.py"))
         self.is_timer = path.endswith(TIMER_HOME)
         self.is_test = _is_test_path(path)
+        norm = os.path.normpath(path)
+        self.in_serving = ((os.sep + "serve" + os.sep in norm
+                            or os.sep + "obs" + os.sep in norm)
+                           and not norm.endswith(METRICS_HOME)
+                           and not self.is_test)
         # names bound by `import time as X` in this file
         self.time_aliases: set[str] = set()
 
@@ -88,6 +113,18 @@ class _FileLint(ast.NodeVisitor):
                     self._emit("REPRO-L001", node,
                                f"from time import {alias.name}; use "
                                f"repro.tune.timer instead")
+                if self.in_serving and alias.name in _CLOCK_ATTRS:
+                    self._emit("REPRO-L004", node,
+                               f"from time import {alias.name} in the "
+                               f"serving stack; stamp with "
+                               f"repro.tune.timer.now")
+        if self.in_serving and node.module in ("numpy", "statistics"):
+            for alias in node.names:
+                if alias.name in _PCT_ATTRS:
+                    self._emit("REPRO-L004", node,
+                               f"from {node.module} import "
+                               f"{alias.name}; percentile math lives "
+                               f"in repro.obs.metrics")
         self.generic_visit(node)
 
     def visit_Attribute(self, node: ast.Attribute):
@@ -97,6 +134,29 @@ class _FileLint(ast.NodeVisitor):
             self._emit("REPRO-L001", node,
                        f"{node.value.id}.{node.attr}; use "
                        f"repro.tune.timer (measure/now/wallclock)")
+        if self.in_serving and isinstance(node.value, ast.Name):
+            if (node.value.id in self.time_aliases
+                    and node.attr in _CLOCK_ATTRS):
+                self._emit("REPRO-L004", node,
+                           f"{node.value.id}.{node.attr} in the "
+                           f"serving stack; stamp with "
+                           f"repro.tune.timer.now")
+            elif (node.value.id in _PCT_MODULES
+                    and node.attr in _PCT_ATTRS):
+                self._emit("REPRO-L004", node,
+                           f"{node.value.id}.{node.attr} in the "
+                           f"serving stack; percentile math lives in "
+                           f"repro.obs.metrics (percentiles/Histogram)")
+        self.generic_visit(node)
+
+    def visit_Subscript(self, node: ast.Subscript):
+        # L004: sorted(...)[...] — hand-rolled rank/percentile indexing
+        if (self.in_serving and isinstance(node.value, ast.Call)
+                and isinstance(node.value.func, ast.Name)
+                and node.value.func.id == "sorted"):
+            self._emit("REPRO-L004", node,
+                       "sorted(...)[...] rank indexing in the serving "
+                       "stack; use repro.obs.metrics.percentiles")
         self.generic_visit(node)
 
     # -- L002 / L003 --------------------------------------------------------

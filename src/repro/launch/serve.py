@@ -13,6 +13,13 @@ arena of KV pages (PagedAdmission — requests admit by the pages they
 actually need), otherwise --num-pages (or a worst-case default) sizes
 the arena directly.  --json-out writes the throughput record — and the
 pages-in-use stats when paged — for CI artifacts.
+
+Observability (docs/observability.md): --trace-out installs a
+repro.obs ServeTracer and writes the Chrome trace-event JSON (open in
+Perfetto, or `python -m repro.obs report trace.json`); --metrics-json
+dumps the Counter/Gauge/Histogram registry snapshot.  Either flag also
+embeds the latency summary (ttft / inter-token p50+p99, queue wait,
+occupancy) in the result record.
 """
 from __future__ import annotations
 
@@ -68,6 +75,14 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--json-out", default=None,
                     help="also write the result record to this path")
+    ap.add_argument("--trace-out", default=None,
+                    help="trace requests through repro.obs and write "
+                         "the Chrome trace-event JSON here (Perfetto-"
+                         "loadable; `python -m repro.obs report` reads "
+                         "the embedded per-request records)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the repro.obs metrics registry "
+                         "snapshot (counters/gauges/histograms) here")
     ap.add_argument("--autotune", action="store_true",
                     help="resolve kernel tile sizes from the tuning "
                          "cache (docs/autotuning.md) instead of the "
@@ -104,9 +119,14 @@ def main():
         policy = FixedSlots(args.slots)
         page_kwargs = {"page_size": args.page_size,
                        "num_pages": args.num_pages}
+    tracer = None
+    if args.trace_out or args.metrics_json:
+        from repro.obs import ServeTracer
+        tracer = ServeTracer()
     engine = Engine(cfg, params, max_len=args.max_len, policy=policy,
                     prefill_chunk=args.prefill_chunk,
-                    kernel_backend=args.kernel, **page_kwargs)
+                    kernel_backend=args.kernel, tracer=tracer,
+                    **page_kwargs)
 
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p)
@@ -145,6 +165,13 @@ def main():
     if engine.pool is not None:
         record["paging"] = dict(engine.page_stats(),
                                 peak_pages_in_use=peak_pages)
+    if tracer is not None:
+        record["latency"] = tracer.summary()
+        if args.trace_out:
+            tracer.export_chrome_trace(args.trace_out)
+        if args.metrics_json:
+            with open(args.metrics_json, "w") as f:
+                json.dump(tracer.metrics.to_json(), f, indent=2)
     print(json.dumps(record))
     if args.json_out:
         with open(args.json_out, "w") as f:

@@ -41,6 +41,17 @@ pages, decode runs the "paged" kernel family (Pallas page-table
 gather), and finishing a request returns its pages to the free list.
 The last arena page is reserved as a write sink so retired slots —
 which keep decoding as batch padding — can never corrupt a live page.
+
+OBSERVABILITY (docs/observability.md): `Engine(tracer=...)` installs a
+repro.obs Tracer and the engine emits the request lifecycle as events —
+submit/reject, queued, admitted (via the Scheduler), per-window prefill
+spans, per-token decode ticks, finish — plus a per-step span with
+occupancy/queue gauges; the PagePool mirrors its level into pages
+gauges.  Hooks are host-side only and gated on `tracer is not None`,
+so the default engine runs zero instrumentation and traced output is
+token-identical to untraced (pinned by tests/test_obs.py).  The only
+behavioral difference under tracing is a block_until_ready per prefill
+window so window spans measure device time, not dispatch time.
 """
 from __future__ import annotations
 
@@ -59,6 +70,7 @@ from repro.serve import sampling as smp
 from repro.serve.paging import PagedAdmission, PagePool
 from repro.serve.scheduler import AdmissionPolicy, ByteBudget, \
     FixedSlots, RequestState, Scheduler, StepOutput
+from repro.tune import timer
 
 
 @dataclasses.dataclass
@@ -71,6 +83,7 @@ class Request:
     generated: Optional[list] = None
     state: RequestState = RequestState.QUEUED
     finish_reason: Optional[str] = None
+    finish_t: Optional[float] = None   # Scheduler.release stamp (timer.now)
 
     def resolved_sampling(self) -> smp.SamplingParams:
         return self.sampling or smp.SamplingParams(
@@ -129,7 +142,11 @@ class Engine:
                  kernel_backend: Optional[str] = None,
                  fused_decode: Optional[bool] = None,
                  page_size: Optional[int] = None,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 tracer=None):
+        # repro.obs Tracer (or None = zero instrumentation); set first
+        # so the Scheduler and PagePool constructed below share it
+        self.tracer = tracer
         if cfg.family == "encdec":
             raise NotImplementedError(
                 "the serving engine targets decoder-only families; "
@@ -196,7 +213,7 @@ class Engine:
         self.prefill_chunk = prefill_chunk
         self.num_slots = self.policy.resolve_slots(cfg, max_len)
         self.max_slots = self.num_slots  # engine-v1 attribute, kept
-        self.scheduler = Scheduler(self.num_slots)
+        self.scheduler = Scheduler(self.num_slots, tracer=tracer)
 
         n = self.num_slots
         self.cache = mdl.init_cache(cfg, n, max_len)
@@ -227,7 +244,7 @@ class Engine:
                 page_table=jnp.full_like(blocks.page_table,
                                          self._sink_page))
             self.pool = PagePool(cfg.paging.num_pages - 1,
-                                 cfg.paging.page_size)
+                                 cfg.paging.page_size, tracer=tracer)
         self.next_tokens = np.zeros((n,), np.int32)
         self.remaining = np.zeros((n,), np.int64)
         # per-slot sampling state, mirrored into the jitted decode step
@@ -260,9 +277,14 @@ class Engine:
         return self._requests[rid]
 
     def submit(self, req: Request):
+        if self.tracer is not None:
+            self.tracer.request_submitted(req.rid, len(req.prompt),
+                                          req.max_new_tokens)
         # cache positions written: len(prompt) prefill + max_new-1 decode
         need = len(req.prompt) + req.max_new_tokens - 1
         if need > self.max_len:
+            if self.tracer is not None:
+                self.tracer.request_rejected(req.rid, "max_len")
             raise ValueError(
                 f"request {req.rid}: prompt ({len(req.prompt)} tokens) + "
                 f"max_new_tokens ({req.max_new_tokens}) needs {need} cache "
@@ -275,6 +297,8 @@ class Engine:
             detail = "a page holds one slot's whole recurrent state" \
                 if self._state_paged \
                 else f"page_size={self.pool.page_size}"
+            if self.tracer is not None:
+                self.tracer.request_rejected(req.rid, "arena")
             raise ValueError(
                 f"request {req.rid} needs {self._req_pages(req)} "
                 f"{kind} pages but the whole arena has "
@@ -288,10 +312,16 @@ class Engine:
         """Advance one engine iteration: admit + prefill queued requests
         into free slots, then decode one token for every decoding slot.
         Returns the StepOutputs emitted by this iteration."""
+        tr = self.tracer
+        t0 = timer.now() if tr is not None else 0.0
         outputs: List[StepOutput] = []
         for slot, req in self.scheduler.admit(self._can_admit):
             outputs.append(self._admit_into(slot, req))
         outputs.extend(self._decode_once())
+        if tr is not None:
+            active = sum(1 for _ in self.scheduler.active())
+            tr.engine_step(t0, active, self.num_slots,
+                           len(self.scheduler.queue))
         return outputs
 
     def stream(self) -> Iterator[StepOutput]:
@@ -420,13 +450,19 @@ class Engine:
         self._topp[slot] = sp.top_p
         key = smp.request_key(sp, self.seed, req.rid)
 
+        tr = self.tracer
         logits = None
         for i, window in enumerate(self._windows(req.prompt)):
             fn = self._prefill_fn(len(window), fresh=(i == 0))
+            t0 = timer.now() if tr is not None else 0.0
             logits, self.cache = fn(
                 self.params, self.cache,
                 jnp.asarray(window, jnp.int32)[None],
                 jnp.int32(slot))
+            if tr is not None:
+                # span measures device time; the sync changes no values
+                jax.block_until_ready(logits)
+                tr.prefill_window(req.rid, slot, len(window), t0)
         # the prefill already produced the first new token, sampled with
         # the request's own params + key (engine v1 greedy'd from here on)
         toks, key = self._sample1(
@@ -439,6 +475,8 @@ class Engine:
         self.next_tokens[slot] = tok
         self.remaining[slot] = req.max_new_tokens - 1
         req.generated.append(tok)
+        if tr is not None:
+            tr.token_emitted(req.rid, slot)
         req.state = RequestState.DECODING
         reason = self._finish_reason(slot, tok, sp)
         if reason:
@@ -459,10 +497,13 @@ class Engine:
             jnp.asarray(self._topp))
         nxt = np.asarray(toks)
         self._keys = np.array(keys)  # writable copy
+        tr = self.tracer
         outputs = []
         for slot, req in active:
             tok = int(nxt[slot])
             req.generated.append(tok)
+            if tr is not None:
+                tr.token_emitted(req.rid, slot)
             self.next_tokens[slot] = tok
             self.remaining[slot] -= 1
             reason = self._finish_reason(slot, tok, self._params_of[slot])
@@ -484,18 +525,22 @@ class Engine:
     def _finish(self, slot: int, req: Request, tok: int,
                 reason: str) -> StepOutput:
         req.state = RequestState.FINISHED
-        req.finish_reason = reason
-        self.scheduler.release(slot)
+        t_fin = self.scheduler.release(slot, finish_reason=reason)
+        req.finish_t = t_fin
         if self.pool is not None:
             # return the pages and re-point the slot at the sink page:
             # the retired slot keeps decoding as batch padding, and its
             # writes must not land in pages the free list may re-issue
             self.pool.free(req.rid)
             self._set_page_row(slot, [])
+            if self.tracer is not None:
+                self.tracer.sink_repoint()
+        if self.tracer is not None:
+            self.tracer.request_finished(req.rid, reason, t_fin)
         self._params_of[slot] = None
         self._temp[slot] = 0.0  # freed slots decode greedily (masked out)
         return StepOutput(req.rid, tok, req.state, finished=True,
-                          finish_reason=reason)
+                          finish_reason=reason, t=t_fin)
 
     # -- paged-KV stats (benchmarks / launcher artifacts) --------------
     def page_stats(self) -> Optional[Dict[str, int]]:

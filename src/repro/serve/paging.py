@@ -49,16 +49,23 @@ class PagePool:
     footprint small.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, tracer=None):
         if num_pages < 1 or page_size < 1:
             raise ValueError(
                 f"PagePool needs num_pages >= 1 and page_size >= 1, got "
                 f"{num_pages} / {page_size}")
         self.num_pages = num_pages
         self.page_size = page_size
+        self.tracer = tracer   # repro.obs.Tracer hooks, or None
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._refcount = [0] * num_pages
         self._tables: Dict[int, List[int]] = {}   # rid -> page ids
+
+    def _notify(self) -> None:
+        """Mirror the pool level into the tracer's pages gauges after
+        any allocation / free (docs/observability.md)."""
+        if self.tracer is not None:
+            self.tracer.pages_changed(self.pages_in_use, self.free_pages)
 
     # -- introspection -------------------------------------------------
     @property
@@ -91,6 +98,7 @@ class PagePool:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._refcount[p] = 1
+        self._notify()
         return pages
 
     def allocate(self, rid: int, num_tokens: int) -> List[int]:
@@ -126,6 +134,7 @@ class PagePool:
             if self._refcount[p] == 0:
                 self._free.append(p)
                 freed.append(p)
+        self._notify()
         return freed
 
     def fork(self, src_rid: int, dst_rid: int,
@@ -157,6 +166,9 @@ class PagePool:
             copies.append((src[full], tail))
             table.append(tail)
         self._tables[dst_rid] = table
+        if self.tracer is not None:
+            self.tracer.cow_fork()
+        self._notify()
         return table, copies
 
 

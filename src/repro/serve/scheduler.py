@@ -26,6 +26,14 @@ Requests move through a lifecycle the engine surfaces per step:
 The Scheduler owns the FIFO queue and the slot array; the engine owns
 the jitted compute.  finish_reason is "stop" (eos or a SamplingParams
 stop token) or "length" (max_new_tokens exhausted).
+
+Observability (docs/observability.md): every StepOutput carries an
+emission timestamp `t` (tune.timer.now monotonic seconds) and
+`Scheduler.release` stamps + propagates the finish_reason onto the
+request, so per-request latency is derivable post-hoc from the outputs
+alone — no engine private state.  An optional Tracer (repro.obs)
+additionally receives queued / admitted / blocked events; when none is
+installed every hook site is a single `is not None` check.
 """
 from __future__ import annotations
 
@@ -33,6 +41,8 @@ import dataclasses
 import enum
 from collections import deque
 from typing import Iterator, List, Optional, Tuple
+
+from repro.tune import timer
 
 
 class RequestState(enum.Enum):
@@ -51,6 +61,10 @@ class StepOutput:
     state: RequestState
     finished: bool = False
     finish_reason: Optional[str] = None  # "stop" | "length"
+    # emission timestamp (tune.timer.now seconds); finish outputs carry
+    # the scheduler's release stamp, so ttft / inter-token / e2e spans
+    # are recoverable from the StepOutput stream alone
+    t: float = dataclasses.field(default_factory=timer.now)
 
 
 # ---------------------------------------------------------------------------
@@ -113,14 +127,17 @@ class Scheduler:
     cache; the queue drains strictly in submission order as slots free.
     """
 
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int, tracer=None):
         self.num_slots = num_slots
         self.queue: deque = deque()
         self.slots: List[Optional[object]] = [None] * num_slots
+        self.tracer = tracer   # repro.obs.Tracer hooks, or None
 
     def submit(self, req) -> None:
         req.state = RequestState.QUEUED
         self.queue.append(req)
+        if self.tracer is not None:
+            self.tracer.request_queued(req.rid)
 
     def admit(self, can_admit=None) -> List[Tuple[int, object]]:
         """Fill free slots from the queue head; returns [(slot, request)].
@@ -133,17 +150,35 @@ class Scheduler:
         admission stops rather than skipping ahead, so a large request
         can't be starved by a stream of small ones."""
         admitted = []
+        blocked = None   # why the queue head is still waiting, if it is
         for i, occupant in enumerate(self.slots):
             if occupant is None and self.queue:
                 if can_admit is not None and not can_admit(self.queue[0]):
+                    blocked = "resources"
                     break
                 req = self.queue.popleft()
                 self.slots[i] = req
                 admitted.append((i, req))
+                if self.tracer is not None:
+                    self.tracer.request_admitted(req.rid, i)
+        if blocked is None and self.queue:
+            blocked = "slots"
+        if blocked is not None and self.tracer is not None:
+            self.tracer.admission_blocked(self.queue[0].rid, blocked)
         return admitted
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int, finish_reason: Optional[str] = None
+                ) -> float:
+        """Free the slot; stamps and returns the finish timestamp and
+        propagates `finish_reason` onto the occupant, so lifecycle
+        timing + outcome survive the release (obs derives records
+        without reaching into engine private state)."""
+        t = timer.now()
+        req = self.slots[slot]
+        if req is not None and finish_reason is not None:
+            req.finish_reason = finish_reason
         self.slots[slot] = None
+        return t
 
     def active(self) -> Iterator[Tuple[int, object]]:
         return ((i, r) for i, r in enumerate(self.slots) if r is not None)

@@ -15,6 +15,13 @@ must carry a "best" cell that passes the same roofline check, has a
 tiles dict, and whose median_ms actually is the minimum over the
 sweep's candidates — a best that no candidate backs means the sweep
 and its summary were produced by different code paths.
+
+Serving-latency documents (BENCH_serve.json, top-level kind
+"serve_lat") carry percentile distributions instead of rooflines: each
+cell must have "ttft_ms" and "inter_token_ms" objects with p50 AND p99
+keys (values may be null — a cell whose requests never reached decode
+— but absence means the bench forgot the schema) plus an "occupancy"
+key.
 """
 from __future__ import annotations
 
@@ -35,6 +42,31 @@ def check_cell(cell: dict, where: str) -> list[str]:
     if "achieved_frac" not in roof:
         errors.append(f"{where}: roofline.achieved_frac key missing "
                       f"(null is fine, absence is not)")
+    return errors
+
+
+def check_serve_cell(cell: dict, where: str) -> list[str]:
+    """One serve_lat cell: latency percentiles + occupancy present.
+
+    Null percentile VALUES are legal (an unmeasured distribution);
+    missing KEYS are the schema violation this gate exists to catch."""
+    errors = []
+    for key in ("ttft_ms", "inter_token_ms"):
+        dist = cell.get(key)
+        if not isinstance(dist, dict):
+            errors.append(f"{where}: {key} must be an object with "
+                          f"p50/p99 keys, got {dist!r}")
+            continue
+        for p in ("p50", "p99"):
+            if p not in dist:
+                errors.append(f"{where}: {key}.{p} key missing "
+                              f"(null is fine, absence is not)")
+            elif dist[p] is not None and \
+                    not isinstance(dist[p], numbers.Real):
+                errors.append(f"{where}: {key}.{p} must be a number "
+                              f"or null, got {dist[p]!r}")
+    if "occupancy" not in cell:
+        errors.append(f"{where}: occupancy key missing")
     return errors
 
 
@@ -62,12 +94,14 @@ def check_best(sweep: dict, cands: list, where: str) -> list[str]:
 
 def check_doc(doc: dict, name: str) -> list[str]:
     errors = []
+    cell_check = check_serve_cell if doc.get("kind") == "serve_lat" \
+        else check_cell
     cells = doc.get("cells")
     if isinstance(cells, list):
         if not cells:
             errors.append(f"{name}: empty cells list")
         for i, cell in enumerate(cells):
-            errors += check_cell(cell, f"{name} cells[{i}]")
+            errors += cell_check(cell, f"{name} cells[{i}]")
     sweeps = doc.get("sweeps")
     if isinstance(sweeps, list):
         if not sweeps:

@@ -160,6 +160,52 @@ def test_lint_interpret_default_l003():
     assert lint.lint_file("tests/test_fake.py", src) == []
 
 
+def test_lint_l004_percentile_math_in_serving():
+    src = ("import numpy as np\n"
+           "def p99(xs):\n"
+           "    return np.percentile(xs, 99)\n")
+    assert rules_of(lint.lint_file("src/repro/serve/fake.py", src)) \
+        == ["REPRO-L004"]
+    assert rules_of(lint.lint_file("src/repro/obs/fake.py", src)) \
+        == ["REPRO-L004"]
+    # the ONE sanctioned home is exempt, as is everything outside the
+    # serving stack (and tests)
+    assert lint.lint_file("src/repro/obs/metrics.py", src) == []
+    assert lint.lint_file("src/repro/train/fake.py", src) == []
+    assert lint.lint_file("tests/test_fake.py", src) == []
+
+
+def test_lint_l004_sorted_rank_indexing():
+    src = ("def p99(xs):\n"
+           "    return sorted(xs)[int(0.99 * len(xs))]\n")
+    assert rules_of(lint.lint_file("src/repro/serve/fake.py", src)) \
+        == ["REPRO-L004"]
+    # sorted() without indexing is fine (ordering, not percentiles)
+    ok = "def f(xs):\n    return sorted(xs)\n"
+    assert lint.lint_file("src/repro/serve/fake.py", ok) == []
+
+
+def test_lint_l004_statistics_import():
+    src = "from statistics import median\n"
+    assert rules_of(lint.lint_file("src/repro/obs/fake.py", src)) \
+        == ["REPRO-L004"]
+    assert lint.lint_file("src/repro/kernels/fake.py", src) == []
+
+
+def test_lint_l004_time_in_serving_fires_both_rules():
+    # time.* inside serve/ breaks two contracts at once: the repo-wide
+    # timer rule (L001) and the serving-observability clock (L004)
+    src = "import time\nt = time.perf_counter()\n"
+    assert rules_of(lint.lint_file("src/repro/serve/fake.py", src)) \
+        == ["REPRO-L001", "REPRO-L004"]
+    # monotonic escapes L001's narrow ban but not the serving rule
+    src_mono = "import time\nt = time.monotonic()\n"
+    assert rules_of(lint.lint_file("src/repro/serve/fake.py",
+                                   src_mono)) == ["REPRO-L004"]
+    assert rules_of(lint.lint_file("src/repro/train/fake.py",
+                                   src_mono)) == []
+
+
 def test_vmem_flags_oversized_cache_entry(tmp_path):
     from repro.tune.cache import TuningCache
     cache = TuningCache(path=str(tmp_path / "tune_cache.json"))
