@@ -49,7 +49,10 @@ class Tracer:
     Hook order per request: request_submitted, request_queued, zero or
     more admission_blocked, request_admitted, one prefill_window per
     prompt chunk, one token_emitted per generated token (the first tick
-    defines ttft), request_finished.  Engine-level: engine_step once
+    defines ttft), request_finished.  A preempted request additionally
+    sees request_preempted (policy: "snapshot" | "page_keep" |
+    "recompute", docs/serving.md) followed later by request_resumed —
+    possibly several such pairs.  Engine-level: engine_step once
     per Engine.step(); pool-level: pages_changed / cow_fork /
     sink_repoint.  request_rejected replaces the whole tree for
     requests refused at submit.
@@ -82,6 +85,13 @@ class Tracer:
         pass
 
     def token_emitted(self, rid: int, slot: int) -> None:
+        pass
+
+    def request_preempted(self, rid: int, slot: int,
+                          policy: str) -> None:
+        pass
+
+    def request_resumed(self, rid: int, slot: int, policy: str) -> None:
         pass
 
     def request_finished(self, rid: int, reason: str,
@@ -126,6 +136,9 @@ class RequestRecord:
     token_ts: List[float] = dataclasses.field(default_factory=list)
     # (t0, t1, tokens) per prefill window, in execution order
     prefill_windows: List[tuple] = dataclasses.field(default_factory=list)
+    # (t, slot, policy) per eviction / per resume, in order
+    preempt_events: List[tuple] = dataclasses.field(default_factory=list)
+    resume_events: List[tuple] = dataclasses.field(default_factory=list)
 
     # -- derived -------------------------------------------------------
     @property
@@ -154,6 +167,22 @@ class RequestRecord:
     @property
     def inter_token_s(self) -> List[float]:
         return [b - a for a, b in zip(self.token_ts, self.token_ts[1:])]
+
+    @property
+    def preemptions(self) -> int:
+        return len(self.preempt_events)
+
+    @property
+    def preempted_s(self) -> Optional[float]:
+        """Total time spent evicted (sum of preempt -> resume spans);
+        None if the request was never preempted."""
+        if not self.preempt_events:
+            return None
+        total = 0.0
+        for (t0, _, _), (t1, _, _) in zip(self.preempt_events,
+                                          self.resume_events):
+            total += t1 - t0
+        return total
 
     @property
     def prefill_s(self) -> Optional[float]:
@@ -186,6 +215,8 @@ class RequestRecord:
             "prefill_s": self.prefill_s, "decode_s": self.decode_s,
             "total_s": self.total_s,
             "prefill_windows": len(self.prefill_windows),
+            "preemptions": self.preemptions,
+            "preempted_s": self.preempted_s,
             "inter_token_p50_s": itl[50], "inter_token_p99_s": itl[99],
         }
 
@@ -228,6 +259,13 @@ class ServeTracer(Tracer):
         self._c_sink = m.counter(
             "serve_sink_repoints_total",
             "freed slots re-pointed at the arena sink page")
+        self._c_preempt = m.counter(
+            "serve_preemptions_total",
+            "requests evicted mid-decode for higher-priority work")
+        self._c_resume = m.counter(
+            "serve_resumes_total",
+            "preempted requests re-admitted (page swap, snapshot "
+            "restore, or drop-and-recompute)")
         self._g_active = m.gauge(
             "serve_slots_active", "slots decoding this step")
         self._g_occ = m.gauge(
@@ -253,6 +291,8 @@ class ServeTracer(Tracer):
             "serve_step_seconds", "one Engine.step() iteration")
         self._h_e2e = m.histogram(
             "serve_e2e_seconds", "submit -> finished")
+        self._h_preempted = m.histogram(
+            "serve_preempted_seconds", "one preempt -> resume span")
 
     # -- internals -----------------------------------------------------
     def _rec(self, rid: int) -> RequestRecord:
@@ -315,6 +355,19 @@ class ServeTracer(Tracer):
         rec.token_ts.append(t)
         self._c_tokens.inc()
 
+    def request_preempted(self, rid, slot, policy):
+        self._rec(rid).preempt_events.append(
+            (self._stamp(), slot, policy))
+        self._c_preempt.inc()
+
+    def request_resumed(self, rid, slot, policy):
+        rec = self._rec(rid)
+        t = self._stamp()
+        rec.resume_events.append((t, slot, policy))
+        self._c_resume.inc()
+        if rec.preempt_events:
+            self._h_preempted.observe(t - rec.preempt_events[-1][0])
+
     def request_finished(self, rid, reason, t=None):
         rec = self._rec(rid)
         rec.finish_t = self._stamp(t)
@@ -340,6 +393,15 @@ class ServeTracer(Tracer):
 
     def sink_repoint(self):
         self._c_sink.inc()
+
+    def reset(self) -> None:
+        """Drop every record, step span and metric sample, keeping the
+        tracer OBJECT (the engine, scheduler and page pool all hold a
+        reference to it).  Lets a benchmark run a jit-warmup workload
+        through the instrumented engine and then measure from a clean
+        slate — without this, the one-time compile spikes dominate any
+        latency percentile the cell reports."""
+        self.__init__()
 
     # -- derived views -------------------------------------------------
     def records(self) -> List[RequestRecord]:
@@ -370,6 +432,7 @@ class ServeTracer(Tracer):
             "inter_token_ms": _ms(percentiles(itl, (50, 99))),
             "queue_wait_ms": _ms(percentiles(waits, (50, 99))),
             "occupancy": None if occ is None else round(occ, 4),
+            "preemptions": sum(r.preemptions for r in recs),
             "steps": len(self._steps),
         }
 
@@ -439,6 +502,9 @@ class ServeTracer(Tracer):
             if rec.first_token_t is not None:
                 span(2, rec.rid, "decode", rec.first_token_t, end,
                      tokens=rec.tokens)
+            for (p0, _, policy), (p1, _, _) in zip(rec.preempt_events,
+                                                   rec.resume_events):
+                span(2, rec.rid, "preempted", p0, p1, policy=policy)
             for t in rec.token_ts:
                 instant(2, rec.rid, "tok", t)
             if rec.slot is not None:

@@ -1,36 +1,60 @@
 """Continuous-batching serving engine — the request-lifecycle API.
 
-Layering (serving API v2):
+Layering (serving API v3, scheduler v2):
 
   sampling.SamplingParams   per-request temperature / top-k / top-p /
                             stop tokens / seed, applied INSIDE the one
                             jitted decode step (greedy slots keep the
                             exact argmax path).
-  scheduler.Scheduler       FIFO queue + slot array; admission policies
-                            (FixedSlots, ByteBudget) resolve the slot
-                            count — ByteBudget from the exact per-slot
-                            decode-cache bytes, so the paper's O(D^2)
-                            linear state admits orders of magnitude more
-                            concurrent sequences than the softmax KV
-                            cache at the same HBM budget.
+  scheduler.Scheduler       priority queue + slot array + victim choice;
+                            admission policies (FixedSlots, ByteBudget)
+                            resolve the slot count — ByteBudget from the
+                            exact per-slot decode-cache bytes, so the
+                            paper's O(D^2) linear state admits orders of
+                            magnitude more concurrent sequences than the
+                            softmax KV cache at the same HBM budget.
   Engine                    owns the batched cache + jitted steps and
                             surfaces the lifecycle: step() advances one
                             engine iteration and returns StepOutputs;
                             stream() yields them; run() drains to a
                             rid -> tokens dict.
 
-Prefill is CHUNKED and in-place: each prompt window runs through
-`model.prefill` on the slot's own row of the batched cache (pytree
-gather -> batch-1 prefill continuing from the slot's position -> pytree
-scatter back), so admission allocates no throwaway max_len cache and a
-long prompt compiles one window-sized prefill instead of one giant
-prompt-length one.  Windowed prefill is exact for every backend: the
-recurrent mixers carry their state, and the softmax baseline's windows
-attend to the cached prefix (continuation prefill, mixers/softmax.py —
-on the pallas kernel impls the per-slot offsets go through the flash
-kernel's scalar-prefetch path, no XLA fallback).  `kernel_backend`
-overrides cfg.la.backend at construction so a serving deployment can
-pick the kernel impl (e.g. "pallas" on TPU) without rebuilding configs.
+TOKEN-INTERLEAVED STEPS (docs/serving.md "Scheduler v2"): every
+`step()` spends a TokenBudget — first one decode token per decoding
+slot (the latency-critical work), then as many chunked-prefill window
+tokens as still fit (at least one window whenever prefill work exists,
+so neither side can starve).  A long prompt therefore no longer runs
+all its windows inside one step while co-resident requests' decode
+stalls (the head-of-line baseline PR 9 pinned in tests/test_obs.py).
+
+Mid-prefill slots are isolated through a host-held CARRY: each
+partially-prefilled request's batch-1 cache rows live on its prefill
+job, windows run batch-1 on merge(carry, live arena), and only on the
+FINAL window is the carry scattered into the slot's rows of the
+batched cache.  The batched decode step — which always runs the full
+batch — meanwhile writes junk into that slot's (sink-routed, for
+paged) rows, which the completion scatter fully overwrites.
+
+PREEMPTION: a blocked higher-priority request picks a lower-priority
+DECODING victim.  Eviction policy is per backend family —
+
+  contiguous        snapshot the victim's batch-1 cache rows to device
+                    buffers (O(max_len) KV for softmax, O(D^2) state
+                    for linear/gla); resume scatters them back.
+  paged KV          free the victim's pages (PagePool.free) and
+                    drop-and-recompute its prefix on resume: re-prefill
+                    prompt + generated[:-1], discard the final logits,
+                    and restore the pending token + PRNG key — greedy
+                    and seeded streams are provably identical to an
+                    uninterrupted run (windowed prefill is exact).
+  paged GLA state   the victim KEEPS its one O(D^2) state page (the
+                    pool allocation survives preemption); the snapshot
+                    is just the page-table row + position, so resume is
+                    a single page swap — the paper's memory story as a
+                    serving win.  When the blocker is PAGES rather than
+                    slots, the page is freed instead and the victim
+                    resumes by recompute (keeping it would deadlock the
+                    higher-priority request).
 
 PAGED-KV mode (docs/paged_kv.md): a PagedAdmission policy — or explicit
 page_size/num_pages kwargs — switches the softmax KV cache to a shared
@@ -39,19 +63,21 @@ a host-side PagePool: admission is gated on the pages a request
 actually needs, prefill windows write straight into its allocated
 pages, decode runs the "paged" kernel family (Pallas page-table
 gather), and finishing a request returns its pages to the free list.
-The last arena page is reserved as a write sink so retired slots —
-which keep decoding as batch padding — can never corrupt a live page.
+The last arena page is reserved as a write sink so retired and
+mid-prefill slots — which keep decoding as batch padding — can never
+corrupt a live page.
 
 OBSERVABILITY (docs/observability.md): `Engine(tracer=...)` installs a
 repro.obs Tracer and the engine emits the request lifecycle as events —
 submit/reject, queued, admitted (via the Scheduler), per-window prefill
-spans, per-token decode ticks, finish — plus a per-step span with
-occupancy/queue gauges; the PagePool mirrors its level into pages
-gauges.  Hooks are host-side only and gated on `tracer is not None`,
-so the default engine runs zero instrumentation and traced output is
-token-identical to untraced (pinned by tests/test_obs.py).  The only
-behavioral difference under tracing is a block_until_ready per prefill
-window so window spans measure device time, not dispatch time.
+spans, per-token decode ticks, preempt/resume transitions, finish —
+plus a per-step span with occupancy/queue gauges; the PagePool mirrors
+its level into pages gauges.  Hooks are host-side only and gated on
+`tracer is not None`, so the default engine runs zero instrumentation
+and traced output is token-identical to untraced (pinned by
+tests/test_obs.py).  The only behavioral difference under tracing is a
+block_until_ready per prefill window so window spans measure device
+time, not dispatch time.
 """
 from __future__ import annotations
 
@@ -69,7 +95,7 @@ from repro.models import model as mdl
 from repro.serve import sampling as smp
 from repro.serve.paging import PagedAdmission, PagePool
 from repro.serve.scheduler import AdmissionPolicy, ByteBudget, \
-    FixedSlots, RequestState, Scheduler, StepOutput
+    FixedSlots, RequestState, Scheduler, StepOutput, TokenBudget
 from repro.tune import timer
 
 
@@ -79,6 +105,7 @@ class Request:
     prompt: list                     # token ids
     max_new_tokens: int = 32
     temperature: float = 0.0         # shorthand; `sampling` wins if set
+    priority: int = 0                # higher admits first & may preempt
     sampling: Optional[smp.SamplingParams] = None
     generated: Optional[list] = None
     state: RequestState = RequestState.QUEUED
@@ -97,7 +124,8 @@ class Request:
 def _cache_batch_dims(cfg, slots: int, max_len: int):
     """Per-leaf batch-dim pytree, found by growing the slot count by one
     under eval_shape (layer-stacked leaves carry their batch dim at
-    different positions; -1 marks leaves that don't scale with slots)."""
+    different positions; -1 marks leaves that don't scale with slots —
+    the shared paged arenas)."""
     a = jax.eval_shape(lambda: mdl.init_cache(cfg, slots, max_len))
     b = jax.eval_shape(lambda: mdl.init_cache(cfg, slots + 1, max_len))
 
@@ -130,6 +158,23 @@ def _scatter_slot(cache, small, bdims, slot):
         cache, small, bdims)
 
 
+@dataclasses.dataclass
+class _PrefillJob:
+    """Host-side progress of one partially-prefilled slot.
+
+    `carry` is the request's OWN batch-1 cache rows (position, KV rows
+    or recurrent state, page-table row); the batched cache's slot rows
+    stay junk/sink-routed until the final window scatters the finished
+    carry in — so the batched decode step can run over the slot
+    mid-prefill without corrupting anything."""
+
+    req: Request
+    windows: List[list]              # prompt windows still to run
+    windows_dev: List                # same windows, device int32 [1, n]
+    carry: object                    # batch-1 cache pytree
+    resume: Optional[dict] = None    # suspended host state (recompute)
+
+
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
@@ -139,6 +184,7 @@ class Engine:
                  max_len: int = 4096, eos_id: int = 2, seed: int = 0,
                  policy: Optional[AdmissionPolicy] = None,
                  prefill_chunk: Optional[int] = None,
+                 token_budget: Optional[int] = None,
                  kernel_backend: Optional[str] = None,
                  fused_decode: Optional[bool] = None,
                  page_size: Optional[int] = None,
@@ -214,10 +260,27 @@ class Engine:
         self.num_slots = self.policy.resolve_slots(cfg, max_len)
         self.max_slots = self.num_slots  # engine-v1 attribute, kept
         self.scheduler = Scheduler(self.num_slots, tracer=tracer)
+        # per-step token budget (scheduler v2): decode tokens for every
+        # decoding slot + at least one prefill window fit by default
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(
+                f"token_budget must be >= 1, got {token_budget}")
+        self.token_budget = token_budget if token_budget is not None \
+            else self.num_slots + (prefill_chunk if prefill_chunk
+                                   else max_len)
+        self.last_step_budget: Dict[str, int] = {
+            "total": self.token_budget, "decode": 0, "prefill": 0}
+        self.preemption_count = 0
 
         n = self.num_slots
         self.cache = mdl.init_cache(cfg, n, max_len)
         self._bdims = _cache_batch_dims(cfg, n, max_len)
+        self._flat_dims = jax.tree.leaves(self._bdims)
+        # contiguous caches have no shared-arena leaves, so the
+        # per-window merge/publish tree traversals are identity maps —
+        # skip them (the window step is on the inter-token tail path)
+        self._has_arena = any(d < 0 for d in self._flat_dims)
+        self._carry0 = None   # shared zero carry template, built lazily
         self.pool: Optional[PagePool] = None
         self._state_paged = False
         if cfg.paging is not None:
@@ -254,6 +317,16 @@ class Engine:
         self._keys = np.zeros((n, 2), np.uint32)
         self._params_of: List[Optional[smp.SamplingParams]] = [None] * n
         self._requests: Dict[int, Request] = {}
+        self._jobs: Dict[int, _PrefillJob] = {}       # slot -> prefill job
+        self._suspended: Dict[int, dict] = {}         # rid -> evicted state
+        self._prepped: Dict[int, dict] = {}           # rid -> device consts
+        self._zero_key = jnp.zeros((1, 2), jnp.uint32)
+        self._slot_ix = [jnp.int32(i) for i in range(n)]
+        self._samp_cache: Dict[tuple, tuple] = {}     # triple -> dev arrays
+        self._root_key = jax.random.PRNGKey(seed)     # fold_in(root, rid)
+        self._true = jnp.asarray(True)
+        self._false = jnp.asarray(False)
+        self._rid0 = jnp.uint32(0)
 
         def decode_fn(params, cache, tokens, keys, temp, topk, topp):
             logits, cache = mdl.decode_step(params, cfg, cache, tokens)
@@ -267,8 +340,37 @@ class Engine:
         # assert_cache_donation pins that the aliasing survives
         # compilation (tests/test_decode_fused.py).
         self._decode = jax.jit(decode_fn, donate_argnums=(1,))
-        self._sample1 = jax.jit(smp.sample)   # prefill's first token
-        self._prefill_fns: dict = {}          # (window_len, fresh) -> jit
+        self._prefill_fns: dict = {}          # window_len -> jit
+        self._complete_fns: dict = {}         # final-window fused jit
+
+        bdims = self._bdims
+        flat_dims = self._flat_dims
+
+        def snap_fn(cache, slot):
+            # batch-dim leaves only: the shared paged arenas stay out of
+            # the snapshot (their buffers are donated every decode step;
+            # a held reference would go stale)
+            flat = jax.tree.leaves(cache)
+            return [jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=d)
+                    for x, d in zip(flat, flat_dims) if d >= 0]
+
+        def restore_fn(cache, snap, slot):
+            it = iter(snap)
+
+            def put(x, d):
+                if d < 0:
+                    return x
+                return jax.lax.dynamic_update_slice_in_dim(
+                    x, next(it).astype(x.dtype), slot, axis=d)
+
+            return jax.tree.map(put, cache, bdims)
+
+        # one jit serves both prefill COMPLETION (scatter the finished
+        # carry's batch leaves into the slot) and preemption RESUME
+        # (scatter the victim's snapshot back); the cache is donated so
+        # the write is in place
+        self._snap = jax.jit(snap_fn)
+        self._restore = jax.jit(restore_fn, donate_argnums=(0,))
 
     # -- public API ----------------------------------------------------
     def request(self, rid: int) -> Request:
@@ -280,6 +382,32 @@ class Engine:
         if self.tracer is not None:
             self.tracer.request_submitted(req.rid, len(req.prompt),
                                           req.max_new_tokens)
+        if req.max_new_tokens < 1:
+            # prefill always emits the token it sampled, so max_new=0
+            # would still generate one token (and under-count its cache
+            # footprint) — reject instead of silently over-generating
+            if self.tracer is not None:
+                self.tracer.request_rejected(req.rid, "max_new_tokens")
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1 (the "
+                f"prompt's final logits always yield one sampled "
+                f"token), got {req.max_new_tokens}")
+        if len(req.prompt) == 0:
+            # an empty prompt would drive a 0-token window into the
+            # jitted prefill path — fail here, not inside jit
+            if self.tracer is not None:
+                self.tracer.request_rejected(req.rid, "empty")
+            raise ValueError(
+                f"request {req.rid}: empty prompt (prefill needs at "
+                f"least one token to produce logits)")
+        live = self._requests.get(req.rid)
+        if live is not None and live.state is not RequestState.FINISHED:
+            # no tracer reject here: stamping rid's record would
+            # corrupt the LIVE request's span tree
+            raise ValueError(
+                f"request id {req.rid} is already live "
+                f"(state={live.state.value}); a reused rid would "
+                f"clobber its record and page table")
         # cache positions written: len(prompt) prefill + max_new-1 decode
         need = len(req.prompt) + req.max_new_tokens - 1
         if need > self.max_len:
@@ -292,7 +420,7 @@ class Engine:
                 f"{self.max_len}")
         if self.pool is not None \
                 and self._req_pages(req) > self.pool.num_pages:
-            # would never admit: the FIFO queue would deadlock behind it
+            # would never admit: the queue would deadlock behind it
             kind = "state" if self._state_paged else "KV"
             detail = "a page holds one slot's whole recurrent state" \
                 if self._state_paged \
@@ -305,19 +433,67 @@ class Engine:
                 f"{self.pool.num_pages} allocatable pages ({detail})")
         if req.generated is None:
             req.generated = []
+        self._prep(req)
         self._requests[req.rid] = req
         self.scheduler.submit(req)
 
+    def _prep(self, req: Request) -> None:
+        """Pre-stage the request's device constants at submit time, and
+        keep even the submit itself nearly transfer-free — submit often
+        lands between co-resident streams' token emissions, so a burst
+        of tiny host->device dispatches here (or, worse, on the
+        admission / completion steps) would show up as an inter-token
+        spike.  Three tricks:
+
+          * the sampling triple (temp, top_k, top_p) is interned in an
+            engine-wide cache — most requests share a few triples;
+          * the PRNG key is NOT derived here: the default key is
+            fold_in(root, rid), which the fused completion program
+            computes on device from the rid scalar (a request's own
+            `seed` takes the rare host path);
+          * prompt windows ship through ONE `jax.device_put` call
+            (eager per-window `jnp.asarray` costs ~4x more here, and
+            device-side row slicing would compile a program per row)."""
+        sp = req.resolved_sampling()
+        trip = (sp.temperature, sp.top_k, sp.top_p)
+        samp = self._samp_cache.get(trip)
+        if samp is None:
+            samp = (jnp.asarray([sp.temperature], jnp.float32),
+                    jnp.asarray([sp.top_k], jnp.int32),
+                    jnp.asarray([sp.top_p], jnp.float32))
+            self._samp_cache[trip] = samp
+        if sp.seed is not None:
+            key, rid_dev, use_rid = (smp.request_key(sp, self.seed,
+                                                     req.rid)[None],
+                                     self._rid0, self._false)
+        else:
+            key, rid_dev, use_rid = (self._zero_key,
+                                     jnp.uint32(req.rid), self._true)
+        self._prepped[req.rid] = {
+            "samp": samp, "key": key, "rid": rid_dev, "use_rid": use_rid,
+            "windows": self._put_windows(self._windows(req.prompt))}
+
+    @staticmethod
+    def _put_windows(windows: List[list]) -> List:
+        """All of a prompt's windows to device in one transfer call."""
+        return jax.device_put([np.asarray(w, np.int32)[None]
+                               for w in windows])
+
     def step(self) -> List[StepOutput]:
-        """Advance one engine iteration: admit + prefill queued requests
-        into free slots, then decode one token for every decoding slot.
-        Returns the StepOutputs emitted by this iteration."""
+        """Advance one engine iteration under the token budget: admit
+        (preempting for blocked higher-priority requests), decode one
+        token per decoding slot, then run prefill windows with the
+        remaining budget.  Returns the StepOutputs emitted."""
         tr = self.tracer
         t0 = timer.now() if tr is not None else 0.0
+        budget = TokenBudget(self.token_budget)
         outputs: List[StepOutput] = []
-        for slot, req in self.scheduler.admit(self._can_admit):
-            outputs.append(self._admit_into(slot, req))
-        outputs.extend(self._decode_once())
+        self._admit_and_preempt(outputs)
+        outputs.extend(self._decode_once(budget))
+        self._prefill_round(budget, outputs)
+        self.last_step_budget = {"total": budget.total,
+                                 "decode": budget.decode_tokens,
+                                 "prefill": budget.prefill_tokens}
         if tr is not None:
             active = sum(1 for _ in self.scheduler.active())
             tr.engine_step(t0, active, self.num_slots,
@@ -337,7 +513,7 @@ class Engine:
                 done[out.rid] = self._requests[out.rid].generated
         return done
 
-    # -- admission + chunked prefill -----------------------------------
+    # -- admission + preemption ----------------------------------------
     def _can_admit(self, req) -> bool:
         """Beyond a free slot, a paged engine needs the request's pages
         to be free RIGHT NOW (its worst-case token footprint — prompt
@@ -347,8 +523,11 @@ class Engine:
         one batch of free slots before the engine prefills any of them,
         so a pure lookahead would over-admit against the same free
         pages (a True verdict is always followed by admission, so a
-        reservation never leaks)."""
+        reservation never leaks).  A preempted gla request that KEPT
+        its state page re-admits against that standing reservation."""
         if self.pool is None:
+            return True
+        if self.pool.holds(req.rid):
             return True
         need = self._req_pages(req)
         if need > self.pool.free_pages:
@@ -356,67 +535,224 @@ class Engine:
         self.pool.allocate_pages(req.rid, need)
         return True
 
-    def _req_pages(self, req) -> int:
-        """Arena pages the request needs for its whole lifetime."""
-        if self._state_paged:
-            return 1   # one O(D^2) state page, independent of tokens
-        return self.pool.pages_needed(self._token_footprint(req))
+    def _admit_and_preempt(self, outputs: List[StepOutput]) -> None:
+        """Fill free slots in priority order; while the queue head is
+        still blocked and outranks a decoding occupant, evict victims
+        (freeing their pages when pages are the blocker) and retry."""
+        while True:
+            for slot, req in self.scheduler.admit(self._can_admit):
+                self._place(slot, req)
+            head = self.scheduler.peek()
+            if head is None:
+                break
+            if not self._preempt_for(head, outputs):
+                break
 
-    @staticmethod
-    def _token_footprint(req) -> int:
-        # cache positions written: len(prompt) prefill + max_new-1 decode
-        return len(req.prompt) + req.max_new_tokens - 1
+    def _preempt_for(self, head, outputs: List[StepOutput]) -> bool:
+        """Try to unblock `head` by preempting strictly-lower-priority
+        work; True if anything was freed (caller retries admission)."""
+        page_blocked = (
+            self.pool is not None and not self.pool.holds(head.rid)
+            and self._req_pages(head) > self.pool.free_pages)
+        victim_slot = self.scheduler.pick_victim(
+            getattr(head, "priority", 0))
+        if victim_slot is not None:
+            outputs.append(
+                self._preempt(victim_slot, need_pages=page_blocked))
+            return True
+        if page_blocked:
+            # no decoding victim, but preempted lower-priority requests
+            # may still hold state pages (the gla page-keep policy) —
+            # reclaim them (demoting their resume to recompute) rather
+            # than deadlock the higher-priority head
+            freed = False
+            for req in self.scheduler.queued():
+                if req is head or req.state is not RequestState.PREEMPTED:
+                    continue
+                if getattr(req, "priority", 0) >= head.priority:
+                    continue
+                if not self.pool.holds(req.rid):
+                    continue
+                self.pool.free(req.rid)
+                st = self._suspended.get(req.rid)
+                if st is not None:
+                    st["snap"] = None
+                freed = True
+                if self._req_pages(head) <= self.pool.free_pages:
+                    break
+            return freed
+        return False
+
+    def _preempt(self, slot: int, need_pages: bool) -> StepOutput:
+        """Evict the DECODING occupant of `slot` (docs/serving.md lists
+        the per-backend policies).  The suspended host state (pending
+        token, PRNG key, remaining budget, optional device snapshot) is
+        parked under the rid until resume."""
+        req = self.scheduler.slots[slot]
+        snap = None
+        if self.pool is not None:
+            if self._state_paged and not need_pages:
+                # the paper's cheap-preemption story: the O(D^2) state
+                # page stays allocated; the snapshot is just the
+                # page-table row + position, resume is one page swap
+                policy = "page_keep"
+                snap = list(self._snap(self.cache, self._slot_ix[slot]))
+            else:
+                policy = "recompute"
+                self.pool.free(req.rid)
+            # padding decode writes from the vacated lane must land in
+            # the sink, never in kept or re-issued pages
+            self._set_page_row(slot, [])
+            if self.tracer is not None:
+                self.tracer.sink_repoint()
+        else:
+            policy = "snapshot"
+            snap = list(self._snap(self.cache, self._slot_ix[slot]))
+        self._suspended[req.rid] = {
+            "snap": snap, "policy": policy,
+            "keys": self._keys[slot].copy(),
+            "remaining": int(self.remaining[slot]),
+            "next": int(self.next_tokens[slot]),
+        }
+        self.scheduler.preempt(slot)
+        self._params_of[slot] = None
+        self._temp[slot] = 0.0   # vacated lane decodes greedily (masked)
+        self.preemption_count += 1
+        if self.tracer is not None:
+            self.tracer.request_preempted(req.rid, slot, policy)
+        return StepOutput(req.rid, None, RequestState.PREEMPTED)
+
+    def _place(self, slot: int, req: Request) -> None:
+        """Put an admitted request into its slot: restore a snapshot
+        victim straight to DECODING, or start a prefill job (fresh
+        prompt, or prompt + generated prefix for drop-and-recompute)."""
+        st = self._suspended.pop(req.rid, None)
+        tr = self.tracer
+        if st is not None and st["snap"] is not None:
+            # single-swap resume: scatter the snapshot rows back (for
+            # paged gla that is just the page-table row + position —
+            # the state page itself never moved)
+            self.cache = self._restore(self.cache, st["snap"],
+                                       self._slot_ix[slot])
+            self._keys[slot] = st["keys"]
+            self.remaining[slot] = st["remaining"]
+            self.next_tokens[slot] = st["next"]
+            self._set_sampling(slot, req)
+            req.state = RequestState.DECODING
+            if tr is not None:
+                tr.request_resumed(req.rid, slot, st["policy"])
+            return
+        if req.generated is None:
+            req.generated = []
+        if st is not None:
+            # drop-and-recompute: re-prefill everything already in the
+            # cache before eviction (prompt + all generated tokens but
+            # the pending one); the rebuilt KV/state is exactly the
+            # uninterrupted cache, so restoring the pending token + key
+            # resumes the identical stream
+            prompt = list(req.prompt) + req.generated[:-1]
+            windows = self._windows(prompt)
+            windows_dev = self._put_windows(windows)
+        else:
+            prompt = req.prompt
+            windows = self._windows(prompt)
+            # pre-staged at submit; copy — the job pops as it runs
+            windows_dev = list(self._prepped[req.rid]["windows"])
+        # shallow copy: the paged branch below replaces carry["blocks"],
+        # which must not leak into the shared template (or into another
+        # job admitted in the same step)
+        carry = dict(self._fresh_carry())
+        if self.pool is not None:
+            pages = self.pool.table(req.rid)
+            self._zero_state_pages(pages)
+            row = np.full((self._pages_per_seq,), self._sink_page,
+                          np.int32)
+            row[:len(pages)] = pages
+            blocks = carry["blocks"]
+            carry["blocks"] = blocks._replace(
+                page_table=jnp.broadcast_to(
+                    jnp.asarray(row), blocks.page_table.shape))
+        self._jobs[slot] = _PrefillJob(req=req, windows=windows,
+                                       windows_dev=windows_dev,
+                                       carry=carry, resume=st)
+        req.state = RequestState.PREFILLING
+        if st is not None and tr is not None:
+            tr.request_resumed(req.rid, slot, "recompute")
+
+    # -- chunked prefill (carry-based, budget-driven) -------------------
+    def _fresh_carry(self):
+        """A zeroed batch-1 cache for a new prefill job.  The zeros are
+        slot-independent and immutable (every window call produces a
+        NEW carry), so one template serves every admission — building
+        fresh device zeros per admission would put a burst of tiny
+        dispatches on the admission step's inter-token delta.  The
+        template's arena leaves may go stale (decode donates those
+        buffers); they are never read — `_merge_carry` swaps in the
+        live arenas before every window."""
+        if self._carry0 is None:
+            def fresh(x, d):
+                if d < 0:
+                    return x
+                shape = list(x.shape)
+                shape[d] = 1
+                return jnp.zeros(shape, x.dtype)
+
+            self._carry0 = jax.tree.map(fresh, self.cache, self._bdims)
+        return self._carry0
+
+    def _merge_carry(self, carry):
+        """The window's batch-1 input: the job's own batch rows + the
+        LIVE shared arenas (decode donates + rebinds them every step,
+        so the carry's arena refs go stale between windows)."""
+        if not self._has_arena:
+            return carry
+        return jax.tree.map(
+            lambda c, big, d: big if d < 0 else c,
+            carry, self.cache, self._bdims)
+
+    def _zero_state_pages(self, pages: List[int]) -> None:
+        """gla paged state accumulates — a newly assigned page must not
+        seed the recurrence with a previous request's state.  (KV pages
+        need no wipe: attention masks by length and rows are
+        overwritten before they are exposed.)"""
+        if not (self._state_paged and pages):
+            return
+        blocks = self.cache["blocks"]
+        # donated jit so XLA scatters the zeros in place — a bare
+        # .at[].set here would materialize a full copy of every
+        # layer's state arena per admission
+        if self._zero_pages is None:
+            self._zero_pages = jax.jit(
+                lambda s, p, idx: (s.at[:, idx].set(0.0),
+                                   p.at[:, idx].set(0.0)),
+                donate_argnums=(0, 1))
+        s_z, p_z = self._zero_pages(blocks.s_pages, blocks.p_pages,
+                                    jnp.asarray(pages, jnp.int32))
+        self.cache["blocks"] = blocks._replace(s_pages=s_z, p_pages=p_z)
 
     def _set_page_row(self, slot: int, pages: List[int]) -> None:
-        """Point slot's page-table row (all layers) at `pages`, padding
-        the unallocated tail with the reserved sink page.  State pages
-        (gla) are also ZEROED on assignment: the recurrent state
-        accumulates, so a freed request's stale state must not seed the
-        next one's recurrence (KV pages need no wipe — attention masks
-        by length and rows are overwritten before they are exposed)."""
+        """Point the BATCHED cache's page-table row for `slot` (all
+        layers) at `pages`, padding the unallocated tail with the
+        reserved sink page.  With the carry design this is only ever
+        called with [] — mid-prefill and vacated lanes sink-route their
+        padding decode writes; the completion scatter installs the real
+        row from the carry."""
         row = np.full((self._pages_per_seq,), self._sink_page, np.int32)
         row[:len(pages)] = pages
         blocks = self.cache["blocks"]
-        if self._state_paged and pages:
-            # donated jit so XLA scatters the zeros in place — a bare
-            # .at[].set here would materialize a full copy of every
-            # layer's state arena per admission
-            if self._zero_pages is None:
-                self._zero_pages = jax.jit(
-                    lambda s, p, idx: (s.at[:, idx].set(0.0),
-                                       p.at[:, idx].set(0.0)),
-                    donate_argnums=(0, 1))
-            s_z, p_z = self._zero_pages(blocks.s_pages, blocks.p_pages,
-                                        jnp.asarray(pages, jnp.int32))
-            blocks = blocks._replace(s_pages=s_z, p_pages=p_z)
         self.cache["blocks"] = blocks._replace(
             page_table=blocks.page_table.at[:, slot, :].set(
                 jnp.asarray(row)))
 
-    def _prefill_fn(self, n: int, fresh: bool):
-        """Jitted: one n-token prompt window through the slot's own rows
-        of the batched cache (gather -> prefill -> scatter).  `fresh`
-        zeroes the slot's rows first (new admission over a stale slot);
-        later windows continue from the carried position/state."""
-        key = (n, fresh)
-        if key not in self._prefill_fns:
-            cfg, bdims = self.cfg, self._bdims
-            paged = self.pool is not None
+    def _prefill_fn(self, n: int):
+        """Jitted: one n-token prompt window on a batch-1 cache,
+        continuing from the carried position/state.  No gather/scatter
+        and no fresh/continue split — the carry is born zeroed, so one
+        compiled program per window LENGTH serves every window."""
+        if n not in self._prefill_fns:
+            cfg = self.cfg
 
-            def zero_fresh(small):
-                if not paged:
-                    return jax.tree.map(jnp.zeros_like, small)
-                # paged: the arena and the just-assigned page-table row
-                # must survive; stale page CONTENT needs no zeroing (it
-                # is overwritten before the length mask exposes it)
-                return {k: (v if k == "blocks"
-                            else jax.tree.map(jnp.zeros_like, v))
-                        for k, v in small.items()}
-
-            def fn(params, cache, tokens, slot):
-                small = _gather_slot(cache, bdims, slot)
-                if fresh:
-                    small = zero_fresh(small)
+            def fn(params, small, tokens):
                 batch = {"tokens": tokens}
                 if cfg.rope_kind == "mrope":
                     start = small["rope_pos"]          # (1,)
@@ -424,11 +760,62 @@ class Engine:
                            + jnp.arange(n, dtype=jnp.int32)[None])
                     batch["positions"] = jnp.broadcast_to(
                         pos[None], (3, 1, n))
-                logits, small = mdl.prefill(params, cfg, batch, small)
-                return logits, _scatter_slot(cache, small, bdims, slot)
+                return mdl.prefill(params, cfg, batch, small)
 
-            self._prefill_fns[key] = jax.jit(fn)
-        return self._prefill_fns[key]
+            self._prefill_fns[n] = jax.jit(fn)
+        return self._prefill_fns[n]
+
+    def _complete_fn(self, n: int):
+        """Jitted FINAL window: prefill the last n prompt tokens, then —
+        in the same program — scatter the finished carry into the
+        slot's rows of the batched cache and sample the first token
+        from the window's logits.  One dispatch instead of three
+        (window + restore + sample), so the step that completes a
+        prefill costs no more than any other window step — the
+        inter-token p99 bound in tests/test_obs.py leans on this.
+
+        The batched cache rides in as its batch-dim LEAVES only,
+        donated so the scatter is in place.  Donating the full cache
+        would be unsafe on a paged engine: its arena leaves alias the
+        merged carry input.  The arenas come out of the window's carry
+        instead (the window updated them in place), so the returned
+        tree is the complete new cache either way."""
+        if n not in self._complete_fns:
+            cfg = self.cfg
+            bdims = self._bdims
+            root = self._root_key   # jit constant
+
+            def fn(params, small, tokens, cache_batch, slot, key,
+                   rid, use_rid, temp, topk, topp):
+                batch = {"tokens": tokens}
+                if cfg.rope_kind == "mrope":
+                    start = small["rope_pos"]          # (1,)
+                    pos = (start[:, None]
+                           + jnp.arange(n, dtype=jnp.int32)[None])
+                    batch["positions"] = jnp.broadcast_to(
+                        pos[None], (3, 1, n))
+                logits, carry = mdl.prefill(params, cfg, batch, small)
+                it = iter(cache_batch)
+
+                def put(c, d):
+                    if d < 0:
+                        return c   # arena: the window's in-place update
+                    big = next(it)
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        big, c.astype(big.dtype), slot, axis=d)
+
+                cache = jax.tree.map(put, carry, bdims)
+                # default key = fold_in(root, rid), derived ON DEVICE —
+                # bit-identical to smp.request_key on host, but keeps
+                # the threefry dispatches off the submit path; an
+                # explicit SamplingParams.seed rides in as `key`
+                derived = jax.random.fold_in(root, rid)[None]
+                key = jnp.where(use_rid, derived, key)
+                toks, key = smp.sample(logits, key, temp, topk, topp)
+                return toks, key, cache
+
+            self._complete_fns[n] = jax.jit(fn, donate_argnums=(3,))
+        return self._complete_fns[n]
 
     def _windows(self, prompt: list) -> List[list]:
         w = self.prefill_chunk
@@ -436,40 +823,71 @@ class Engine:
             return [prompt]
         return [prompt[i:i + w] for i in range(0, len(prompt), w)]
 
-    def _admit_into(self, slot: int, req: Request) -> StepOutput:
-        req.state = RequestState.PREFILLING
-        if req.generated is None:
-            req.generated = []
-        if self.pool is not None:
-            # pages were reserved by _can_admit at admission time
-            self._set_page_row(slot, self.pool.table(req.rid))
+    def _run_window(self, slot: int, job: _PrefillJob) -> None:
+        window = job.windows.pop(0)
+        tokens = job.windows_dev.pop(0)
+        fn = self._prefill_fn(len(window))
+        tr = self.tracer
+        t0 = timer.now() if tr is not None else 0.0
+        logits, carry = fn(self.params, self._merge_carry(job.carry),
+                           tokens)
+        job.carry = carry
+        # arena leaves (paged KV / state) were updated in place by the
+        # window — publish them so decode and other jobs see the writes
+        if self._has_arena:
+            self.cache = jax.tree.map(
+                lambda big, c, d: c if d < 0 else big,
+                self.cache, carry, self._bdims)
+        if tr is not None:
+            # span measures device time; the sync changes no values
+            jax.block_until_ready(logits)
+            tr.prefill_window(job.req.rid, slot, len(window), t0)
+
+    def _set_sampling(self, slot: int, req: Request) -> None:
         sp = req.resolved_sampling()
         self._params_of[slot] = sp
         self._temp[slot] = sp.temperature
         self._topk[slot] = sp.top_k
         self._topp[slot] = sp.top_p
-        key = smp.request_key(sp, self.seed, req.rid)
 
+    def _run_final_window(self, slot: int,
+                          job: _PrefillJob) -> Optional[StepOutput]:
+        """Run the LAST window through the fused completion program:
+        the carry lands in the slot's rows of the batched cache
+        (overwriting the junk the padded decode wrote there) and the
+        first token is sampled, all in one dispatch.  On a recompute
+        resume the sample is discarded and the pending token + PRNG key
+        are restored instead — that token was already emitted before
+        eviction."""
+        window = job.windows.pop(0)
+        tokens = job.windows_dev.pop(0)
+        req = job.req
+        sp = req.resolved_sampling()
+        prep = self._prepped[req.rid]
+        temp, topk, topp = prep["samp"]
+        fn = self._complete_fn(len(window))
         tr = self.tracer
-        logits = None
-        for i, window in enumerate(self._windows(req.prompt)):
-            fn = self._prefill_fn(len(window), fresh=(i == 0))
-            t0 = timer.now() if tr is not None else 0.0
-            logits, self.cache = fn(
-                self.params, self.cache,
-                jnp.asarray(window, jnp.int32)[None],
-                jnp.int32(slot))
-            if tr is not None:
-                # span measures device time; the sync changes no values
-                jax.block_until_ready(logits)
-                tr.prefill_window(req.rid, slot, len(window), t0)
-        # the prefill already produced the first new token, sampled with
-        # the request's own params + key (engine v1 greedy'd from here on)
-        toks, key = self._sample1(
-            logits, key[None],
-            jnp.asarray([sp.temperature], jnp.float32),
-            jnp.asarray([sp.top_k], jnp.int32),
-            jnp.asarray([sp.top_p], jnp.float32))
+        t0 = timer.now() if tr is not None else 0.0
+        cache_batch = [x for x, d in zip(jax.tree.leaves(self.cache),
+                                         self._flat_dims) if d >= 0]
+        toks, key, self.cache = fn(
+            self.params, self._merge_carry(job.carry), tokens,
+            cache_batch, self._slot_ix[slot],
+            prep["key"], prep["rid"], prep["use_rid"],
+            temp, topk, topp)
+        if tr is not None:
+            # span measures device time; the sync changes no values
+            jax.block_until_ready(toks)
+            tr.prefill_window(req.rid, slot, len(window), t0)
+        self._set_sampling(slot, req)
+        del self._jobs[slot]
+        if job.resume is not None:
+            # the rebuilt cache equals the uninterrupted one
+            self._keys[slot] = job.resume["keys"]
+            self.remaining[slot] = job.resume["remaining"]
+            self.next_tokens[slot] = job.resume["next"]
+            req.state = RequestState.DECODING
+            return None
         tok = int(toks[0])
         self._keys[slot] = np.array(key[0])
         self.next_tokens[slot] = tok
@@ -483,11 +901,52 @@ class Engine:
             return self._finish(slot, req, tok, reason)
         return StepOutput(req.rid, tok, req.state)
 
+    def _prefill_round(self, budget: TokenBudget,
+                       outputs: List[StepOutput]) -> None:
+        """Spend the step's remaining budget on prefill windows, round-
+        robin over mid-prefill slots in (priority, admission) order.
+        At least ONE window runs whenever prefill work exists — the
+        budget shapes the decode/prefill mix, it cannot starve prefill
+        into a livelock."""
+        ran_any = False
+        while True:
+            cands = self.scheduler.prefilling()
+            if not cands:
+                return
+            progressed = False
+            for slot, req in cands:
+                job = self._jobs[slot]
+                if not budget.fits(len(job.windows[0])):
+                    continue
+                budget.spend_prefill(len(job.windows[0]))
+                self._spend_window(slot, job, outputs)
+                progressed = ran_any = True
+            if not progressed:
+                break
+        if not ran_any:
+            cands = self.scheduler.prefilling()
+            if not cands:
+                return
+            slot, req = cands[0]
+            job = self._jobs[slot]
+            budget.spend_prefill(len(job.windows[0]))
+            self._spend_window(slot, job, outputs)
+
+    def _spend_window(self, slot: int, job: _PrefillJob,
+                      outputs: List[StepOutput]) -> None:
+        if len(job.windows) == 1:
+            out = self._run_final_window(slot, job)
+            if out is not None:
+                outputs.append(out)
+        else:
+            self._run_window(slot, job)
+
     # -- decode --------------------------------------------------------
-    def _decode_once(self) -> List[StepOutput]:
-        active = list(self.scheduler.active())
-        if not active:
+    def _decode_once(self, budget: TokenBudget) -> List[StepOutput]:
+        decoding = list(self.scheduler.decoding())
+        if not decoding:
             return []
+        budget.spend_decode(len(decoding))
         toks, self.cache, keys = self._decode(
             self.params, self.cache,
             jnp.asarray(self.next_tokens),
@@ -499,7 +958,7 @@ class Engine:
         self._keys = np.array(keys)  # writable copy
         tr = self.tracer
         outputs = []
-        for slot, req in active:
+        for slot, req in decoding:
             tok = int(nxt[slot])
             req.generated.append(tok)
             if tr is not None:
@@ -537,10 +996,24 @@ class Engine:
                 self.tracer.sink_repoint()
         if self.tracer is not None:
             self.tracer.request_finished(req.rid, reason, t_fin)
+        self._prepped.pop(req.rid, None)
         self._params_of[slot] = None
         self._temp[slot] = 0.0  # freed slots decode greedily (masked out)
         return StepOutput(req.rid, tok, req.state, finished=True,
                           finish_reason=reason, t=t_fin)
+
+    def _req_pages(self, req) -> int:
+        """Arena pages the request needs for its whole lifetime."""
+        if self._state_paged:
+            return 1   # one O(D^2) state page, independent of tokens
+        return self.pool.pages_needed(self._token_footprint(req))
+
+    @staticmethod
+    def _token_footprint(req) -> int:
+        # cache positions written: len(prompt) prefill + max_new-1
+        # decode (max_new >= 1 is enforced at submit, so this never
+        # under-counts)
+        return len(req.prompt) + req.max_new_tokens - 1
 
     # -- paged-KV stats (benchmarks / launcher artifacts) --------------
     def page_stats(self) -> Optional[Dict[str, int]]:

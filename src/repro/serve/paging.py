@@ -18,6 +18,14 @@ the vLLM-style alternative (docs/paged_kv.md):
                   max_len bytes per slot — a long-context request that
                   ByteBudget would refuse fits as long as its tokens do.
 
+Preemption (scheduler v2, docs/serving.md): `free(rid)` is NOT tied to
+request finish — the engine also calls it to evict a preemption
+victim's pages mid-flight, and the victim re-admits later through a
+fresh `allocate_pages` (drop-and-recompute) or, for the gla paged
+STATE layout, keeps its one page across the preemption entirely:
+`holds(rid)` lets admission recognize that standing reservation
+instead of double-allocating.
+
 The pool is deliberately jax-free: it runs on the host between engine
 steps, like the Scheduler.
 """
@@ -82,6 +90,12 @@ class PagePool:
     def table(self, rid: int) -> List[int]:
         """The request's page ids, in token order (a copy)."""
         return list(self._tables[rid])
+
+    def holds(self, rid: int) -> bool:
+        """Whether the request currently holds an allocation — True for
+        a preempted gla request that kept its state page, so re-
+        admission swaps the page back in instead of allocating anew."""
+        return rid in self._tables
 
     def pages_needed(self, num_tokens: int) -> int:
         return pages_for(num_tokens, self.page_size)

@@ -19,27 +19,40 @@ from the model config:
                   worst-case max_len charge — long contexts stay
                   admissible until the arena is truly full.
 
-Requests move through a lifecycle the engine surfaces per step:
+SCHEDULER V2 (docs/serving.md "Scheduler v2"): the queue is a priority
+queue (higher `Request.priority` first, strict FIFO within a class),
+each engine step spends a TOKEN BUDGET that mixes one decode token per
+decoding slot with chunked-prefill window tokens (Sarathi/vLLM-style
+interleaving — a long prompt no longer monopolizes whole steps), and a
+blocked higher-priority request may PREEMPT a lower-priority decoding
+victim.  Requests move through:
 
   QUEUED -> PREFILLING -> DECODING -> FINISHED(finish_reason)
+                 ^             |
+                 |             v
+                 + <------ PREEMPTED   (requeued at original arrival
+                                        order within its class)
 
-The Scheduler owns the FIFO queue and the slot array; the engine owns
-the jitted compute.  finish_reason is "stop" (eos or a SamplingParams
-stop token) or "length" (max_new_tokens exhausted).
+The Scheduler owns the queue, the slot array and the victim choice;
+the engine owns the jitted compute and the per-backend eviction /
+restore mechanics (snapshot, state-page keep, drop-and-recompute).
+finish_reason is "stop" (eos or a SamplingParams stop token) or
+"length" (max_new_tokens exhausted).
 
 Observability (docs/observability.md): every StepOutput carries an
 emission timestamp `t` (tune.timer.now monotonic seconds) and
 `Scheduler.release` stamps + propagates the finish_reason onto the
 request, so per-request latency is derivable post-hoc from the outputs
 alone — no engine private state.  An optional Tracer (repro.obs)
-additionally receives queued / admitted / blocked events; when none is
-installed every hook site is a single `is not None` check.
+additionally receives queued / admitted / blocked / preempted /
+resumed events; when none is installed every hook site is a single
+`is not None` check.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-from collections import deque
+import heapq
 from typing import Iterator, List, Optional, Tuple
 
 from repro.tune import timer
@@ -49,6 +62,7 @@ class RequestState(enum.Enum):
     QUEUED = "queued"
     PREFILLING = "prefilling"
     DECODING = "decoding"
+    PREEMPTED = "preempted"
     FINISHED = "finished"
 
 
@@ -117,27 +131,94 @@ class ByteBudget(AdmissionPolicy):
 
 
 # ---------------------------------------------------------------------------
-# FIFO scheduler
+# Per-step token budget
+# ---------------------------------------------------------------------------
+
+class TokenBudget:
+    """One engine step's token ledger (Sarathi-style mixing).
+
+    The engine spends it decode-first (one token per decoding slot, the
+    latency-critical work), then on prefill-window tokens until the
+    next window no longer fits.  `force` lets the engine guarantee
+    forward progress: when a step did nothing else, one window runs
+    even if it overflows the budget (a budget smaller than the chunk
+    size must not livelock prefill)."""
+
+    def __init__(self, total: int):
+        self.total = int(total)
+        self.decode_tokens = 0
+        self.prefill_tokens = 0
+
+    @property
+    def spent(self) -> int:
+        return self.decode_tokens + self.prefill_tokens
+
+    @property
+    def remaining(self) -> int:
+        return max(self.total - self.spent, 0)
+
+    def fits(self, n: int) -> bool:
+        return n <= self.remaining
+
+    def spend_decode(self, n: int) -> None:
+        self.decode_tokens += n
+
+    def spend_prefill(self, n: int) -> None:
+        self.prefill_tokens += n
+
+
+# ---------------------------------------------------------------------------
+# Priority scheduler with preemption (v2)
 # ---------------------------------------------------------------------------
 
 class Scheduler:
-    """FIFO admission over a fixed slot array.
+    """Priority admission over a fixed slot array.
 
     Holds no jax state: slots map indices into the engine's batched
-    cache; the queue drains strictly in submission order as slots free.
+    cache.  The queue drains highest-priority-first; WITHIN a priority
+    class it is strictly FIFO by arrival (`Request.priority` defaults
+    to 0, so a priority-free workload behaves exactly like the v1 FIFO
+    scheduler).  A preempted request re-enters the queue under its
+    ORIGINAL arrival order, so it resumes ahead of later arrivals of
+    its own class.
     """
 
     def __init__(self, num_slots: int, tracer=None):
         self.num_slots = num_slots
-        self.queue: deque = deque()
+        # heap of (-priority, arrival_seq, request)
+        self.queue: List[tuple] = []
         self.slots: List[Optional[object]] = [None] * num_slots
         self.tracer = tracer   # repro.obs.Tracer hooks, or None
+        self._seq = 0          # arrival order, assigned once per request
+        self._seq_of: dict = {}        # rid -> arrival seq
+        self._admit_seq = 0            # admission recency (victim tie-break)
+        self._admitted_at: dict = {}   # rid -> admission seq
+
+    def _push(self, req) -> None:
+        prio = getattr(req, "priority", 0)
+        heapq.heappush(self.queue, (-prio, self._seq_of[req.rid], req))
 
     def submit(self, req) -> None:
         req.state = RequestState.QUEUED
-        self.queue.append(req)
+        self._seq_of[req.rid] = self._seq
+        self._seq += 1
+        self._push(req)
         if self.tracer is not None:
             self.tracer.request_queued(req.rid)
+
+    def requeue(self, req) -> None:
+        """Re-enter a preempted request under its original arrival seq
+        (ahead of anything submitted after it in its priority class)."""
+        req.state = RequestState.PREEMPTED
+        self._push(req)
+
+    def peek(self):
+        """The next request admission would try, or None."""
+        return self.queue[0][2] if self.queue else None
+
+    def queued(self) -> Iterator[object]:
+        """Waiting requests in admission order (heap order, exact)."""
+        return (entry[2] for entry in sorted(self.queue))
 
     def admit(self, can_admit=None) -> List[Tuple[int, object]]:
         """Fill free slots from the queue head; returns [(slot, request)].
@@ -146,26 +227,60 @@ class Scheduler:
         availability (the paged engine passes a free-page check).  A
         True verdict is ALWAYS followed by admission of that request,
         so the callback may reserve resources as its answer.  The
-        queue stays strictly FIFO: when the HEAD request doesn't fit,
-        admission stops rather than skipping ahead, so a large request
-        can't be starved by a stream of small ones."""
+        queue never skips: when the HEAD request (highest priority,
+        earliest arrival) doesn't fit, admission stops rather than
+        admitting a later request past it, so a large request can't be
+        starved by a stream of small ones."""
         admitted = []
         blocked = None   # why the queue head is still waiting, if it is
         for i, occupant in enumerate(self.slots):
             if occupant is None and self.queue:
-                if can_admit is not None and not can_admit(self.queue[0]):
+                head = self.queue[0][2]
+                if can_admit is not None and not can_admit(head):
                     blocked = "resources"
                     break
-                req = self.queue.popleft()
-                self.slots[i] = req
-                admitted.append((i, req))
+                heapq.heappop(self.queue)
+                self.slots[i] = head
+                self._admitted_at[head.rid] = self._admit_seq
+                self._admit_seq += 1
+                admitted.append((i, head))
                 if self.tracer is not None:
-                    self.tracer.request_admitted(req.rid, i)
+                    self.tracer.request_admitted(head.rid, i)
         if blocked is None and self.queue:
             blocked = "slots"
         if blocked is not None and self.tracer is not None:
-            self.tracer.admission_blocked(self.queue[0].rid, blocked)
+            self.tracer.admission_blocked(self.queue[0][2].rid, blocked)
         return admitted
+
+    def pick_victim(self, min_priority: int) -> Optional[int]:
+        """Slot of the best preemption victim for a blocked request of
+        `min_priority`: a DECODING occupant of strictly lower priority
+        — lowest priority first, most-recently-admitted on ties (the
+        newest work loses the least progress).  None if no slot holds
+        an eligible victim (PREFILLING slots are never preempted: their
+        partial window state is not restorable)."""
+        best = None
+        for i, req in enumerate(self.slots):
+            if req is None or req.state is not RequestState.DECODING:
+                continue
+            prio = getattr(req, "priority", 0)
+            if prio >= min_priority:
+                continue
+            key = (prio, -self._admitted_at.get(req.rid, 0))
+            if best is None or key < best[0]:
+                best = (key, i)
+        return None if best is None else best[1]
+
+    def preempt(self, slot: int) -> object:
+        """Evict the slot's occupant back into the queue (PREEMPTED,
+        original arrival order).  The engine performs the state
+        eviction (snapshot / page policy) around this call."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is empty; nothing to preempt")
+        self.slots[slot] = None
+        self.requeue(req)
+        return req
 
     def release(self, slot: int, finish_reason: Optional[str] = None
                 ) -> float:
@@ -182,6 +297,21 @@ class Scheduler:
 
     def active(self) -> Iterator[Tuple[int, object]]:
         return ((i, r) for i, r in enumerate(self.slots) if r is not None)
+
+    def decoding(self) -> Iterator[Tuple[int, object]]:
+        """Slots whose occupant is past prefill (consumes decode
+        budget; their sampled batch token is surfaced)."""
+        return ((i, r) for i, r in enumerate(self.slots)
+                if r is not None and r.state is RequestState.DECODING)
+
+    def prefilling(self) -> List[Tuple[int, object]]:
+        """Slots mid-prefill, in (priority desc, admission order) —
+        the order the engine feeds them prefill-window budget."""
+        rows = [(i, r) for i, r in enumerate(self.slots)
+                if r is not None and r.state is RequestState.PREFILLING]
+        rows.sort(key=lambda ir: (-getattr(ir[1], "priority", 0),
+                                  self._admitted_at.get(ir[1].rid, 0)))
+        return rows
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slots)

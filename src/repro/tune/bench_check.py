@@ -67,6 +67,15 @@ def check_serve_cell(cell: dict, where: str) -> list[str]:
                               f"or null, got {dist[p]!r}")
     if "occupancy" not in cell:
         errors.append(f"{where}: occupancy key missing")
+    # scheduler v2: every cell must report its preemption count (0 is a
+    # legal value for a priority-free workload; absence means the bench
+    # predates the preemption schema)
+    preempt = cell.get("preemptions", None)
+    if "preemptions" not in cell:
+        errors.append(f"{where}: preemptions key missing")
+    elif not isinstance(preempt, numbers.Real):
+        errors.append(f"{where}: preemptions must be a number, "
+                      f"got {preempt!r}")
     return errors
 
 

@@ -14,6 +14,7 @@ The load-bearing pins:
     decode, so inter-token p99 >> p50 — the baseline number the
     scheduler roadmap item is judged against.
 """
+import gc
 import json
 import math
 import re
@@ -228,31 +229,70 @@ def test_step_output_timestamps_and_finish(linear_setup):
 
 
 def test_decode_stall_inter_token_p99(linear_setup):
-    """The head-of-line baseline: a long prompt's chunked prefill
-    (admitted mid-stream) stalls the co-resident short request's
-    decode, so its inter-token p99 dwarfs its p50.  This is the number
-    the scheduler-v2 roadmap item must improve."""
+    """The head-of-line scenario PR 9 pinned as a stall (inter-token
+    p99 > 5x p50 under the FIFO scheduler, which ran ALL of a long
+    prompt's prefill windows inside one step): under scheduler v2 the
+    token budget interleaves at most ~one prefill window with each
+    decode step, so the mid-stream long-prompt injection no longer
+    blows up the short request's tail — p99 stays within 2x p50.
+
+    Timing-test hygiene: Python GC is paused over the measured steps
+    (a gen-2 collection costs a few ms — several inter-token periods
+    at this model size), and the bound gets two attempts.  A genuine
+    head-of-line stall is STRUCTURAL — the admission step runs every
+    window back-to-back, several ms extra on one delta, every attempt
+    — while a stray OS/scheduler hiccup is transient."""
     cfg, params = linear_setup
-    tr = ServeTracer()
-    eng = Engine(cfg, params, max_slots=2, max_len=64, eos_id=-1,
-                 prefill_chunk=5, tracer=tr)
-    eng.submit(Request(rid=0, prompt=list(range(3, 9)),
-                       max_new_tokens=16))
-    for _ in range(8):          # rid 0 decodes at steady cadence
-        eng.step()
-    eng.submit(Request(rid=1, prompt=list(range(3, 33)),
-                       max_new_tokens=4))   # 6 prefill windows
-    while eng.scheduler.has_work():
-        eng.step()
-    rec = tr.records()[0]
-    assert rec.rid == 0 and rec.closed
-    deltas = rec.inter_token_s
-    assert len(deltas) == 15
-    ps = percentiles(deltas, (50, 99))
-    assert ps[99] > 5 * ps[50], (ps, "no head-of-line stall observed")
-    # the stall is attributable: it overlaps rid 1's prefill windows
-    long_rec = tr.records()[1]
-    assert len(long_rec.prefill_windows) == 6
+
+    def attempt():
+        tr = ServeTracer()
+        eng = Engine(cfg, params, max_slots=2, max_len=64, eos_id=-1,
+                     prefill_chunk=5, tracer=tr)
+        # warm every jitted program this workload will hit (the
+        # 5-token mid-prompt window, the fused 5- and 1-token FINAL
+        # windows, the batched decode) so the measured deltas see
+        # SCHEDULING, not one-time compile spikes
+        eng.submit(Request(rid=99, prompt=list(range(3, 9)),
+                           max_new_tokens=2))     # windows [5, 1]
+        eng.submit(Request(rid=98, prompt=list(range(3, 13)),
+                           max_new_tokens=2))     # windows [5, 5]
+        eng.run()
+        gc.collect()
+        gc.disable()
+        try:
+            eng.submit(Request(rid=0, prompt=list(range(3, 9)),
+                               max_new_tokens=16))
+            for _ in range(8):      # rid 0 decodes at steady cadence
+                eng.step()
+            eng.submit(Request(rid=1, prompt=list(range(3, 33)),
+                               max_new_tokens=4))   # 6 prefill windows
+            while eng.scheduler.has_work():
+                eng.step()
+        finally:
+            gc.enable()
+        rec = tr.records()[0]
+        assert rec.rid == 0 and rec.closed
+        deltas = rec.inter_token_s
+        assert len(deltas) == 15
+        # the long prompt still ran all its windows — spread across
+        # steps (token-interleaved), not packed into one
+        long_rec = tr.records()[1]
+        assert len(long_rec.prefill_windows) == 6
+        # ... and the short request kept emitting tokens BETWEEN those
+        # windows — the interleaving itself, not just its tail effect
+        w0 = long_rec.prefill_windows[0][0]
+        w1 = long_rec.prefill_windows[-1][1]
+        interleaved = [t for t in rec.token_ts if w0 < t < w1]
+        assert len(interleaved) >= 4, (len(interleaved),
+                                       "prefill ran as one "
+                                       "uninterrupted block — no "
+                                       "token interleaving")
+        return percentiles(deltas, (50, 99))
+
+    ps = attempt()
+    if ps[99] > 2 * ps[50]:
+        ps = attempt()
+    assert ps[99] <= 2 * ps[50], (ps, "head-of-line stall regressed")
 
 
 def test_rejected_request_traced(linear_setup):
@@ -308,6 +348,8 @@ def test_nil_tracer_is_inert():
     t.request_admitted(0, 0)
     t.prefill_window(0, 0, 5, 0.0)
     t.token_emitted(0, 0)
+    t.request_preempted(0, 0, "snapshot")
+    t.request_resumed(0, 1, "snapshot")
     t.request_finished(0, "stop")
     t.engine_step(0.0, 1, 2, 0)
     t.pages_changed(1, 2)
@@ -381,7 +423,7 @@ def _serve_cell(**over):
     cell = {"impl": "linear", "backend": "linear",
             "ttft_ms": {"p50": 1.0, "p99": 2.0},
             "inter_token_ms": {"p50": 0.5, "p99": 1.5},
-            "occupancy": 0.8}
+            "occupancy": 0.8, "preemptions": 0}
     cell.update(over)
     return cell
 
@@ -403,6 +445,13 @@ def test_bench_check_serve_schema():
     no_occ = {"kind": "serve_lat", "cells": [_serve_cell()]}
     del no_occ["cells"][0]["occupancy"]
     assert any("occupancy" in e for e in check_doc(no_occ, "B"))
+    # scheduler v2: the preemption count is part of the schema
+    no_preempt = {"kind": "serve_lat", "cells": [_serve_cell()]}
+    del no_preempt["cells"][0]["preemptions"]
+    assert any("preemptions" in e for e in check_doc(no_preempt, "B"))
+    bad_preempt = {"kind": "serve_lat",
+                   "cells": [_serve_cell(preemptions="two")]}
+    assert any("preemptions" in e for e in check_doc(bad_preempt, "B"))
     not_dict = {"kind": "serve_lat",
                 "cells": [_serve_cell(inter_token_ms=3.0)]}
     assert any("inter_token_ms" in e for e in check_doc(not_dict, "B"))

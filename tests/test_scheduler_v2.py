@@ -1,0 +1,307 @@
+"""Scheduler v2 (token-interleaved + priority + preemption) invariants.
+
+The load-bearing pins:
+
+  * PREEMPT-RESUME IDENTITY: a preempted + resumed request's token
+    stream is identical to an uninterrupted run, for every eviction
+    policy — contiguous snapshot/restore, paged-softmax
+    drop-and-recompute, and the gla state-page keep/swap (the paper's
+    O(D^2)-state "preemption is nearly free" story);
+  * priority classes order admission under contention (strict FIFO
+    within a class, preempted requests resume at their original
+    arrival order);
+  * the per-step TokenBudget accounting is exact: decode tokens equal
+    the decoding slots, prefill tokens cover every prompt token
+    exactly once, and a step only overflows the budget by the one
+    forced window that guarantees prefill liveness;
+  * no reservation leaks: after a preemption-heavy run drains, the
+    page pool is back to empty and nothing is left suspended.
+
+Plus the request-lifecycle bugfix regressions this PR ships:
+max_new_tokens=1 yields exactly one token (and <1 is rejected at
+submit), empty prompts are rejected at submit instead of crashing
+inside jit, and a live rid cannot be silently overwritten.
+"""
+import jax
+import pytest
+
+from helpers import backend_cfg
+from repro.models import model as mdl
+from repro.obs import ServeTracer
+from repro.serve.engine import Engine, Request
+from repro.serve.scheduler import RequestState
+
+A_PROMPT = list(range(3, 15))    # 12 tokens -> 3 windows at chunk 4
+B_PROMPT = list(range(20, 24))   # 4 tokens  -> 1 window
+
+
+@pytest.fixture(scope="module")
+def setups():
+    out = {}
+    for backend in ("linear", "softmax", "gla"):
+        cfg = backend_cfg(backend)
+        out[backend] = (cfg, mdl.init_params(cfg, jax.random.PRNGKey(0)))
+    return out
+
+
+def _solo_tokens(cfg, params, req_kw, **engine_kw):
+    eng = Engine(cfg, params, max_slots=1, max_len=64, eos_id=-1,
+                 prefill_chunk=4, **engine_kw)
+    eng.submit(Request(**req_kw))
+    return eng.run()[req_kw["rid"]]
+
+
+def _preempted_run(cfg, params, **engine_kw):
+    """rid 0 (priority 0) decodes; rid 1 (priority 5) lands mid-stream
+    on a 1-slot engine, forcing a preemption.  Returns (done, engine,
+    tracer)."""
+    tr = ServeTracer()
+    eng = Engine(cfg, params, max_slots=1, max_len=64, eos_id=-1,
+                 prefill_chunk=4, tracer=tr, **engine_kw)
+    eng.submit(Request(rid=0, prompt=list(A_PROMPT), max_new_tokens=10))
+    for _ in range(6):           # rid 0 well into decode
+        eng.step()
+    assert eng.request(0).state is RequestState.DECODING
+    eng.submit(Request(rid=1, prompt=list(B_PROMPT), max_new_tokens=3,
+                       priority=5))
+    done = eng.run()
+    assert eng.preemption_count >= 1
+    return done, eng, tr
+
+
+def _rec(tr, rid):
+    return {r.rid: r for r in tr.records()}[rid]
+
+
+def _policies(tr, rid):
+    return [p for _, _, p in _rec(tr, rid).preempt_events]
+
+
+# ---------------------------------------------------------------------------
+# Preempt-resume greedy identity, per eviction policy
+# ---------------------------------------------------------------------------
+
+def test_preempt_resume_identity_linear_snapshot(setups):
+    cfg, params = setups["linear"]
+    solo_a = _solo_tokens(cfg, params,
+                          dict(rid=0, prompt=list(A_PROMPT),
+                               max_new_tokens=10))
+    solo_b = _solo_tokens(cfg, params,
+                          dict(rid=1, prompt=list(B_PROMPT),
+                               max_new_tokens=3))
+    done, eng, tr = _preempted_run(cfg, params)
+    assert done[0] == solo_a and done[1] == solo_b
+    assert _policies(tr, 0) == ["snapshot"] * eng.preemption_count
+
+
+def test_preempt_resume_identity_softmax_snapshot(setups):
+    cfg, params = setups["softmax"]
+    solo_a = _solo_tokens(cfg, params,
+                          dict(rid=0, prompt=list(A_PROMPT),
+                               max_new_tokens=10))
+    done, eng, tr = _preempted_run(cfg, params)
+    assert done[0] == solo_a
+    assert _policies(tr, 0) == ["snapshot"] * eng.preemption_count
+
+
+def test_preempt_resume_identity_paged_softmax_recompute(setups):
+    """Paged KV: the victim's pages are freed at eviction and the
+    prefix is recomputed on resume — tokens still identical."""
+    cfg, params = setups["softmax"]
+    solo_a = _solo_tokens(cfg, params,
+                          dict(rid=0, prompt=list(A_PROMPT),
+                               max_new_tokens=10), page_size=8)
+    done, eng, tr = _preempted_run(cfg, params, page_size=8)
+    assert done[0] == solo_a
+    assert _policies(tr, 0) == ["recompute"] * eng.preemption_count
+    rec = tr.records()[0]
+    assert rec.preemptions == eng.preemption_count
+    assert rec.preempted_s is not None and rec.preempted_s > 0
+
+
+def test_preempt_resume_identity_paged_gla_page_swap(setups):
+    """Paged gla state: a slot-blocked preemption KEEPS the victim's
+    one O(D^2) state page (the pool allocation survives), so resume is
+    a single page-table swap — and the stream is identical."""
+    cfg, params = setups["gla"]
+    solo_a = _solo_tokens(cfg, params,
+                          dict(rid=0, prompt=list(A_PROMPT),
+                               max_new_tokens=10),
+                          page_size=8, num_pages=4)
+    done, eng, tr = _preempted_run(cfg, params, page_size=8, num_pages=4)
+    assert done[0] == solo_a
+    assert _policies(tr, 0) == ["page_keep"] * eng.preemption_count
+
+
+def test_paged_gla_keeps_state_page_while_preempted(setups):
+    """While evicted under the page_keep policy, the victim still holds
+    its pool allocation — the whole point of the O(D^2) state story."""
+    cfg, params = setups["gla"]
+    eng = Engine(cfg, params, max_slots=1, max_len=64, eos_id=-1,
+                 prefill_chunk=4, page_size=8, num_pages=4)
+    eng.submit(Request(rid=0, prompt=list(A_PROMPT), max_new_tokens=10))
+    for _ in range(6):
+        eng.step()
+    eng.submit(Request(rid=1, prompt=list(B_PROMPT), max_new_tokens=3,
+                       priority=5))
+    eng.step()   # preempts rid 0, admits rid 1
+    assert eng.request(0).state is RequestState.PREEMPTED
+    assert eng.pool.holds(0), "state page must survive the preemption"
+    assert eng.pool.holds(1)
+    done = eng.run()
+    assert set(done) == {0, 1}
+    assert eng.pool.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Priority ordering + preemption lifecycle surface
+# ---------------------------------------------------------------------------
+
+def test_priority_ordering_under_contention(setups):
+    """One slot, five requests: higher classes drain first, FIFO within
+    a class, and the preempted baseline request resumes at its original
+    arrival order (ahead of the later same-class arrival)."""
+    cfg, params = setups["linear"]
+    eng = Engine(cfg, params, max_slots=1, max_len=64, eos_id=-1,
+                 prefill_chunk=4)
+    eng.submit(Request(rid=0, prompt=list(A_PROMPT), max_new_tokens=8))
+    for _ in range(5):
+        eng.step()
+    for rid, prio in ((1, 0), (2, 5), (3, 5), (4, 10)):
+        eng.submit(Request(rid=rid, prompt=list(B_PROMPT),
+                           max_new_tokens=2, priority=prio))
+    finish_order = [o.rid for o in eng.stream() if o.finished]
+    assert finish_order == [4, 2, 3, 0, 1]
+    assert eng.preemption_count >= 1
+
+
+def test_preemption_surfaces_step_output(setups):
+    cfg, params = setups["linear"]
+    eng = Engine(cfg, params, max_slots=1, max_len=64, eos_id=-1,
+                 prefill_chunk=4)
+    eng.submit(Request(rid=0, prompt=list(A_PROMPT), max_new_tokens=8))
+    for _ in range(6):
+        eng.step()
+    eng.submit(Request(rid=1, prompt=list(B_PROMPT), max_new_tokens=2,
+                       priority=3))
+    outs = list(eng.stream())
+    pre = [o for o in outs if o.state is RequestState.PREEMPTED]
+    assert pre and pre[0].rid == 0 and pre[0].token is None
+    assert not pre[0].finished
+    # the preempted request still finished, after the preemptor
+    fins = [o.rid for o in outs if o.finished]
+    assert fins == [1, 0]
+
+
+# ---------------------------------------------------------------------------
+# Token-budget accounting
+# ---------------------------------------------------------------------------
+
+def test_token_budget_accounting_per_step(setups):
+    """Per step: decode spend == decoding slots, prefill spend stays
+    within the remaining budget (modulo the single forced window that
+    guarantees liveness), and every prompt token is prefilled exactly
+    once across the run."""
+    cfg, params = setups["linear"]
+    eng = Engine(cfg, params, max_slots=2, max_len=64, eos_id=-1,
+                 prefill_chunk=4, token_budget=6)
+    prompts = {0: list(range(3, 11)), 1: list(range(5, 13))}  # 8 + 8
+    for rid, p in prompts.items():
+        eng.submit(Request(rid=rid, prompt=p, max_new_tokens=4))
+    total_prefill = 0
+    while eng.scheduler.has_work():
+        decoding_before = sum(
+            1 for _, r in eng.scheduler.active()
+            if r.state is RequestState.DECODING)
+        eng.step()
+        b = eng.last_step_budget
+        assert b["total"] == 6
+        assert b["decode"] == decoding_before
+        if b["decode"] + b["prefill"] > b["total"]:
+            # only the forced liveness window may overflow
+            assert b["prefill"] <= 4
+        total_prefill += b["prefill"]
+    assert total_prefill == sum(len(p) for p in prompts.values())
+
+
+def test_token_budget_default_resolution(setups):
+    cfg, params = setups["linear"]
+    eng = Engine(cfg, params, max_slots=3, max_len=64, prefill_chunk=5)
+    assert eng.token_budget == 3 + 5
+    eng2 = Engine(cfg, params, max_slots=2, max_len=32)
+    assert eng2.token_budget == 2 + 32
+    with pytest.raises(ValueError, match="token_budget"):
+        Engine(cfg, params, max_slots=2, max_len=32, token_budget=0)
+
+
+# ---------------------------------------------------------------------------
+# No reservation leak across preemption
+# ---------------------------------------------------------------------------
+
+def test_no_page_reservation_leak_after_preemption(setups):
+    cfg, params = setups["softmax"]
+    done, eng, _ = _preempted_run(cfg, params, page_size=8)
+    assert set(done) == {0, 1}
+    assert eng.pool.pages_in_use == 0
+    assert eng.pool.free_pages == eng.pool.num_pages
+    assert not eng._suspended and not eng._jobs
+
+
+def test_no_state_page_leak_after_preemption_gla(setups):
+    cfg, params = setups["gla"]
+    done, eng, _ = _preempted_run(cfg, params, page_size=8, num_pages=4)
+    assert set(done) == {0, 1}
+    assert eng.pool.pages_in_use == 0
+    assert eng.pool.free_pages == eng.pool.num_pages
+    assert not eng._suspended and not eng._jobs
+
+
+# ---------------------------------------------------------------------------
+# Request-lifecycle bugfix regressions (satellites 1-3)
+# ---------------------------------------------------------------------------
+
+def test_max_new_tokens_one_yields_exactly_one_token(setups):
+    cfg, params = setups["linear"]
+    eng = Engine(cfg, params, max_slots=1, max_len=64, eos_id=-1)
+    eng.submit(Request(rid=0, prompt=list(range(3, 9)),
+                       max_new_tokens=1))
+    done = eng.run()
+    assert len(done[0]) == 1
+    req = eng.request(0)
+    assert req.finish_reason == "length"
+    assert eng.remaining[0] == 0   # never went negative
+
+
+def test_submit_rejects_max_new_tokens_below_one(setups):
+    cfg, params = setups["linear"]
+    tr = ServeTracer()
+    eng = Engine(cfg, params, max_slots=1, max_len=64, tracer=tr)
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(Request(rid=7, prompt=[3, 4, 5],
+                               max_new_tokens=bad))
+    assert not eng.scheduler.queue
+    assert tr.records()[0].finish_reason == "rejected:max_new_tokens"
+
+
+def test_submit_rejects_empty_prompt(setups):
+    cfg, params = setups["linear"]
+    tr = ServeTracer()
+    eng = Engine(cfg, params, max_slots=1, max_len=64, tracer=tr)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(rid=0, prompt=[], max_new_tokens=4))
+    assert not eng.scheduler.queue
+    assert tr.records()[0].finish_reason == "rejected:empty"
+
+
+def test_submit_rejects_duplicate_live_rid(setups):
+    cfg, params = setups["linear"]
+    eng = Engine(cfg, params, max_slots=1, max_len=64, eos_id=-1)
+    eng.submit(Request(rid=0, prompt=[3, 4, 5], max_new_tokens=2))
+    with pytest.raises(ValueError, match="already live"):
+        eng.submit(Request(rid=0, prompt=[6, 7], max_new_tokens=2))
+    done = eng.run()
+    assert len(done[0]) == 2
+    # a FINISHED rid may be reused
+    eng.submit(Request(rid=0, prompt=[6, 7], max_new_tokens=2))
+    assert len(eng.run()[0]) == 2
